@@ -1,0 +1,50 @@
+"""Device-mode (TPU-adapted) retrieval: pruning on the flattened net with
+static-capacity compaction — eval counts vs naive, plus batched-query
+throughput; and the elastic fleet (shards / resize / dead-shard)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mutate_queries, row
+from repro.core.distributed import device_range_query, flatten_net
+from repro.core.refnet import ReferenceNet
+from repro.data import synthetic
+from repro.distances import get
+from repro.launch.elastic import ElasticIndex
+
+
+def run(full: bool = False):
+    out = []
+    n = 2000 if full else 600
+    data = synthetic.proteins(n, seed=0)
+    net = ReferenceNet(get("levenshtein"), data, eps_prime=1.0,
+                       tight_bounds=True).build()
+    flat = flatten_net(net)
+    qs = mutate_queries(data, 8, seed=4)
+    for eps in [1.0, 2.0, 4.0]:
+        t0 = time.perf_counter()
+        hits, stats = device_range_query(flat, qs, eps)
+        dt = (time.perf_counter() - t0) * 1e6 / len(qs)
+        out.append(row(
+            f"device_query_eps{eps}", dt,
+            evals_frac=round(stats["total_evals"] / (len(qs) * n), 4),
+            pivots=flat.n_pivots,
+            hits=int(hits.sum()),
+        ))
+    # fleet: shards + resize
+    fleet = ElasticIndex("levenshtein", data, [f"w{i}" for i in range(4)],
+                         tight_bounds=True)
+    t0 = time.perf_counter()
+    for q in qs:
+        fleet.range_query(q, 2.0)
+    dt = (time.perf_counter() - t0) * 1e6 / len(qs)
+    out.append(row("fleet_query_4shards", dt,
+                   evals=fleet.eval_count()))
+    t0 = time.perf_counter()
+    frac = fleet.resize([f"w{i}" for i in range(5)])
+    dt = (time.perf_counter() - t0) * 1e6
+    out.append(row("fleet_resize_4to5", dt, moved_frac=round(frac, 3)))
+    return out

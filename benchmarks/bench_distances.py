@@ -1,0 +1,56 @@
+"""Paper Fig. 4 — distance distributions per (dataset x distance), plus
+throughput of the batched distance backends (numpy wavefront vs JAX engine
+vs Pallas interpret kernel)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.data import synthetic
+from repro.distances import np_backend
+
+CASES = [
+    ("proteins", "levenshtein"),
+    ("songs", "frechet"),
+    ("songs", "erp"),
+    ("traj", "frechet"),
+    ("traj", "erp"),
+]
+
+
+def run(full: bool = False):
+    out = []
+    n = 2000 if full else 400
+    for ds, dist in CASES:
+        gen, _ = synthetic.DATASETS[ds]
+        data = gen(n, seed=0)
+        rng = np.random.default_rng(1)
+        a = data[rng.integers(0, n, 512)]
+        b = data[rng.integers(0, n, 512)]
+        batch = np_backend.batch_for(dist)
+        us = timeit(lambda: np.asarray(batch(a, b)))
+        d = np.asarray(batch(a, b))
+        hist, edges = np.histogram(d, bins=10)
+        out.append(row(
+            f"fig4_dist_{ds}_{dist}", us / 512,
+            mean=round(float(d.mean()), 2),
+            p10=round(float(np.percentile(d, 10)), 2),
+            p90=round(float(np.percentile(d, 90)), 2),
+            max=round(float(d.max()), 2),
+            skew_mass_2_5=round(float(np.mean((d >= 2) & (d <= 5))), 3),
+        ))
+    # backend throughput on the paper's l=20 windows
+    data = synthetic.proteins(1024, seed=0)
+    a, b = data[:512], data[512:1024]
+    us_np = timeit(lambda: np_backend.batch_alignment(a, b, "lev"))
+    out.append(row("backend_numpy_wavefront_lev_l20", us_np / 512))
+    from repro.distances import get
+    jb = get("levenshtein").batch
+    us_jax = timeit(lambda: np.asarray(jb(a, b)))
+    out.append(row("backend_jax_wavefront_lev_l20", us_jax / 512))
+    from repro.kernels import ops
+    us_k = timeit(lambda: np.asarray(
+        ops.wavefront(a[:64], b[:64], "lev", interpret=True)))
+    out.append(row("backend_pallas_interpret_lev_l20", us_k / 64))
+    return out

@@ -1,0 +1,62 @@
+"""Paper Fig. 12 + §7 — end-to-end subsequence matching: unique matching
+windows vs consecutive (>=2 chained) windows as eps grows, plus type-II/III
+query latency through the full 5-step pipeline."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.matching import SubsequenceMatcher
+from repro.data import synthetic
+
+
+def run(full: bool = False):
+    out = []
+    lam, l0 = 40, 2          # l = 20, the paper's window size
+    n_seqs = 40 if full else 12
+    seqs = synthetic.protein_sequences(n_seqs, length=400, seed=0)
+    m = SubsequenceMatcher("levenshtein", lam, l0, index="refnet",
+                           tight_bounds=True, num_max=5).build(seqs)
+    n_windows = len(m.meta)
+    rng = np.random.default_rng(3)
+    # queries: mutated fragments of the database (so matches exist)
+    base = seqs[0]
+    Q = np.concatenate([seqs[1][37:37 + 60], seqs[2][100:160]])
+    for eps in [1.0, 2.0, 4.0, 8.0, 12.0]:
+        m.reset_counter()
+        t0 = time.perf_counter()
+        hits = m.segment_hits(Q, eps)
+        dt = (time.perf_counter() - t0) * 1e6
+        uniq = {h.window_idx for h in hits}
+        # consecutive pairs (the fig-12 "at least two consecutive" curve)
+        starts = {}
+        for h in hits:
+            starts.setdefault(h.window.seq_id, set()).add(h.window.start)
+        consec = set()
+        for sid, ss in starts.items():
+            for s in ss:
+                if s + m.l in ss:
+                    consec.add((sid, s))
+                    consec.add((sid, s + m.l))
+        out.append(row(
+            f"fig12_matching_eps{eps}", dt,
+            uniq_frac=round(len(uniq) / n_windows, 4),
+            consec_frac=round(len(consec) / n_windows, 4),
+            evals_frac=round(m.eval_count / (n_windows * max(
+                1, sum(1 for _ in hits) or 1)), 6) if hits else 0.0,
+        ))
+    # type II / III end-to-end latency
+    t0 = time.perf_counter()
+    best = m.query_longest(Q, 4.0)
+    us2 = (time.perf_counter() - t0) * 1e6
+    out.append(row("type2_longest_latency", us2,
+                   q_len=best.q_len if best else 0))
+    t0 = time.perf_counter()
+    near = m.query_nearest(Q, eps_max=12.0)
+    us3 = (time.perf_counter() - t0) * 1e6
+    out.append(row("type3_nearest_latency", us3,
+                   distance=round(near.distance, 2) if near else -1))
+    return out

@@ -1,0 +1,74 @@
+"""Paper Figs. 8-11 — range-query pruning: % distance computations vs the
+naive scan for RN / RN-5 / RN-tight / CT / MV-5 / MV-50 across range sizes,
+on PROTEINS (Levenshtein), SONGS (DFD), TRAJ (ERP + DFD)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import mutate_queries, row
+from repro.core.covertree import CoverTree
+from repro.core.refindex import MVReferenceIndex
+from repro.core.refnet import ReferenceNet
+from repro.data import synthetic
+from repro.distances import get
+
+
+def _indices(dist_name, data, eps_prime):
+    dist = get(dist_name)
+    return {
+        "rn": ReferenceNet(dist, data, eps_prime=eps_prime).build(),
+        "rn5": ReferenceNet(dist, data, eps_prime=eps_prime,
+                            num_max=5).build(),
+        "rn_tight": ReferenceNet(dist, data, eps_prime=eps_prime,
+                                 num_max=5, tight_bounds=True).build(),
+        "ct": CoverTree(dist, data, eps_prime=eps_prime).build(),
+        "mv5": MVReferenceIndex(dist, data, n_refs=5).build(),
+        "mv50": MVReferenceIndex(dist, data, n_refs=50).build(),
+    }
+
+
+def _sweep(name, dist_name, data, eps_prime, ranges, n_queries, out):
+    idx = _indices(dist_name, data, eps_prime)
+    qs = mutate_queries(data, n_queries, seed=2)
+    N = len(data)
+    for eps in ranges:
+        base = None
+        for label, net in idx.items():
+            net.counter.reset()
+            t0 = time.perf_counter()
+            hits = 0
+            for q in qs:
+                res = net.range_query(q, eps)
+                hits += len(res)
+            dt = (time.perf_counter() - t0) * 1e6 / n_queries
+            frac = net.counter.count / (n_queries * N)
+            if base is None:
+                base = hits
+            assert hits == base, f"{label} disagrees at eps={eps}"
+            out.append(row(
+                f"{name}_eps{eps}_{label}", dt,
+                evals_frac=round(frac, 4),
+                hits_per_query=round(hits / n_queries, 1),
+            ))
+
+
+def run(full: bool = False):
+    out = []
+    n = 4000 if full else 1200
+    nq = 20 if full else 8
+    data = synthetic.proteins(n, seed=0)
+    _sweep("fig8_proteins_lev", "levenshtein", data, 1.0,
+           [1.0, 2.0, 4.0, 8.0], nq, out)
+    songs = synthetic.songs(n, seed=0)
+    _sweep("fig9_songs_dfd", "frechet", songs, 0.5,
+           [0.5, 1.0, 2.0], nq, out)
+    traj = synthetic.trajectories(n, seed=0)
+    _sweep("fig10_traj_erp", "erp", traj, 2.0,
+           [1.0, 2.0, 4.0], nq, out)
+    _sweep("fig11_traj_dfd", "frechet", traj, 0.5,
+           [0.25, 0.5, 1.0], nq, out)
+    return out

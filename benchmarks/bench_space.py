@@ -1,0 +1,66 @@
+"""Paper Figs. 5-7 — reference-net space overhead: node counts, list
+entries, average parents, index bytes; linear growth; the DFD-vs-ERP
+distribution effect; the num_max=5 cap."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.refnet import ReferenceNet
+from repro.data import synthetic
+from repro.distances import get
+
+
+def _build(dist_name, data, eps_prime, num_max=None):
+    t0 = time.perf_counter()
+    net = ReferenceNet(get(dist_name), data, eps_prime=eps_prime,
+                       num_max=num_max).build()
+    dt = time.perf_counter() - t0
+    return net, dt
+
+
+def run(full: bool = False):
+    out = []
+    sizes = [1000, 2000, 4000] if not full else [5000, 10000, 20000]
+    # fig 5: PROTEINS + Levenshtein, linear space
+    for n in sizes:
+        data = synthetic.proteins(n, seed=0)
+        net, dt = _build("levenshtein", data, 1.0)
+        s = net.stats()
+        out.append(row(
+            f"fig5_space_proteins_{n}", dt * 1e6 / n,
+            list_entries=s["n_list_entries"],
+            entries_per_obj=round(s["n_list_entries"] / n, 2),
+            avg_parents=round(s["avg_parents"], 2),
+            size_mb=round(s["size_bytes"] / 2**20, 3),
+        ))
+    # fig 6: SONGS — DFD (skewed) vs ERP (spread) vs DFD num_max=5
+    n = sizes[1]
+    songs = synthetic.songs(n, seed=0)
+    for label, dist_name, num_max in [
+            ("dfd", "frechet", None), ("erp", "erp", None),
+            ("dfd_cap5", "frechet", 5)]:
+        eps_prime = 0.5 if dist_name == "frechet" else 2.0
+        net, dt = _build(dist_name, songs, eps_prime, num_max)
+        s = net.stats()
+        out.append(row(
+            f"fig6_space_songs_{label}_{n}", dt * 1e6 / n,
+            avg_parents=round(s["avg_parents"], 2),
+            max_parents=s["max_parents"],
+            list_entries=s["n_list_entries"],
+            size_mb=round(s["size_bytes"] / 2**20, 3),
+        ))
+    # fig 7: TRAJ — both distances stay small
+    traj = synthetic.trajectories(n, seed=0)
+    for dist_name, eps_prime in [("frechet", 0.5), ("erp", 2.0)]:
+        net, dt = _build(dist_name, traj, eps_prime)
+        s = net.stats()
+        out.append(row(
+            f"fig7_space_traj_{dist_name}_{n}", dt * 1e6 / n,
+            avg_parents=round(s["avg_parents"], 2),
+            size_mb=round(s["size_bytes"] / 2**20, 3),
+        ))
+    return out

@@ -1,0 +1,38 @@
+"""Shared benchmark utilities.  Every benchmark prints CSV rows
+``name,us_per_call,derived`` and returns them as dicts for run.py."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def row(name: str, us_per_call: float, **derived) -> Dict:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}")
+    return {"name": name, "us_per_call": us_per_call, **derived}
+
+
+def timeit(fn: Callable, *args, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def mutate_queries(data: np.ndarray, n: int, seed: int = 0,
+                   rate: float = 0.1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    qs = data[rng.integers(0, len(data), n)].copy()
+    if data.dtype.kind in "iu":
+        hi = int(data.max()) + 1
+        flips = rng.random(qs.shape) < rate
+        qs[flips] = rng.integers(0, hi, flips.sum())
+    else:
+        qs += rng.normal(scale=rate * np.std(data),
+                         size=qs.shape).astype(qs.dtype)
+    return qs

@@ -1,0 +1,56 @@
+"""Counted, batched distance evaluation over a window database.
+
+The paper's evaluation currency (§8.2) is the number of distance
+computations relative to a naive linear scan; every index implementation
+funnels its evaluations through :class:`CountedDistance` so the counts are
+exact and comparable.  Host-mode traversal uses the numpy wavefront backend
+(sequential small batches — dispatch-bound on CPU); the device path in
+``core/distributed.py`` uses the Pallas kernels instead.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.distances import base as dist_base
+from repro.distances import np_backend
+
+
+class CountedDistance:
+    """Batched distances from one query object to indexed database windows."""
+
+    def __init__(self, dist: dist_base.Distance, data: np.ndarray):
+        self.dist = dist
+        self.data = np.asarray(data)
+        self.n = len(self.data)
+        self._batch = np_backend.batch_for(dist.name)
+        self.count = 0
+
+    def reset(self) -> None:
+        self.count = 0
+
+    def eval(self, q: np.ndarray, idxs: Sequence[int],
+             q_len: Optional[int] = None) -> np.ndarray:
+        """delta(q, data[i]) for i in idxs. Counts len(idxs) evaluations."""
+        idxs = np.asarray(idxs, np.int64)
+        if idxs.size == 0:
+            return np.zeros((0,), np.float32)
+        self.count += int(idxs.size)
+        ys = self.data[idxs]
+        q = np.asarray(q)
+        L = ys.shape[1]
+        qlen = len(q) if q_len is None else q_len
+        if not self.dist.variable_length and qlen != L:
+            raise ValueError(
+                f"{self.dist.name} requires equal lengths ({qlen} != {L})")
+        # The numpy wavefront backend supports rectangular (Lx != Ly) tiles.
+        xs = np.repeat(q[None, :qlen], len(ys), 0)
+        lx = np.full(len(ys), qlen)
+        ly = np.full(len(ys), L)
+        return np.asarray(self._batch(xs, ys, lx, ly), np.float32)
+
+    def pairwise(self, i: int, idxs: Sequence[int]) -> np.ndarray:
+        """delta(data[i], data[j]) for j in idxs (used at build time)."""
+        return self.eval(self.data[i], idxs)

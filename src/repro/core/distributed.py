@@ -1,0 +1,234 @@
+"""Device-mode (TPU-native) retrieval: the reference net flattened into
+dense arrays + a shard_map fleet query (DESIGN.md §4.2/§4.3).
+
+Host mode chases pointers; accelerators want dense batched work.  The net
+is flattened at a pivot level m: every reference with level >= m becomes a
+*pivot*; every window belongs to exactly one pivot's member list (its
+parent chain's level-m ancestor), carrying its exact link distance.  A
+batched range query is then:
+
+  1. one wavefront-kernel call: queries x pivots distances  (Q, P);
+  2. triangle-inequality verdicts per pivot:
+       d + sub_radius <= eps  -> accept all members free,
+       d - sub_radius >  eps  -> prune all members free;
+  3. per-member ring bound |d(q,pivot) - d(pivot,w)| > eps prunes members
+     of undecided pivots elementwise (free — the link distances are dense
+     arrays);
+  4. survivors are *compacted* (jnp.nonzero with a static capacity) and
+     evaluated in one batched kernel call.
+
+Pruning therefore saves real compute and HBM traffic, not just a counter —
+the static capacity is the TPU translation of data-dependent work.  The
+fleet version shard_maps this over the data axis (stacked per-shard arrays)
+with queries replicated; results are exact unions, since shards partition
+the windows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.refnet import ReferenceNet
+from repro.distances import np_backend
+
+_MODE_OF = {"levenshtein": "lev", "erp": "erp", "frechet": "dfd",
+            "dtw": "dtw", "euclidean": None, "hamming": None}
+
+
+@dataclasses.dataclass
+class FlatNet:
+    """Flattened (pivot -> members) arrays; all padded to static shapes."""
+    pivots: np.ndarray          # (P, l[, d]) pivot windows
+    pivot_radius: np.ndarray    # (P,) exact derived-subtree radius
+    members: np.ndarray         # (P, M) window ids, -1 padding
+    member_dist: np.ndarray     # (P, M) exact delta(pivot, member)
+    data: np.ndarray            # (N, l[, d]) all windows
+    n_pivots: int
+    dist_name: str
+
+    @property
+    def eval_width(self) -> int:
+        return self.members.shape[1]
+
+
+def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
+                ) -> FlatNet:
+    """Flatten a host reference net at ``pivot_level`` (default ~sqrt(N))."""
+    N = len(net.data)
+    levels = sorted({n.level for n in net.nodes.values() if n.level >= 0})
+    if pivot_level is None:
+        # lowest level whose reference count is <= sqrt-ish of N
+        target = max(1, int(math.sqrt(N)))
+        pivot_level = levels[-1]
+        for l in levels:
+            cnt = sum(1 for n in net.nodes.values() if n.level >= l)
+            if cnt <= 4 * target:
+                pivot_level = l
+                break
+    pivot_ids = [n.idx for n in net.nodes.values() if n.level >= pivot_level]
+    pivot_of = {}
+
+    def assign(pid):
+        for x in net._subtree(pid, include_self=True):
+            node = net.nodes.get(x)
+            if x not in pivot_of and (node is None or
+                                      node.level < pivot_level or x == pid):
+                pivot_of[x] = pid
+
+    for pid in pivot_ids:
+        assign(pid)
+    # distances pivot->member (batched, not counted: build-time)
+    members: List[List[int]] = [[] for _ in pivot_ids]
+    pidx = {p: i for i, p in enumerate(pivot_ids)}
+    for x, p in pivot_of.items():
+        members[pidx[p]].append(x)
+    M = max(len(m) for m in members)
+    P = len(pivot_ids)
+    mem = np.full((P, M), -1, np.int64)
+    mdist = np.zeros((P, M), np.float32)
+    batch = np_backend.batch_for(net.dist.name)
+    radius = np.zeros((P,), np.float32)
+    for i, (pid, ms) in enumerate(zip(pivot_ids, members)):
+        mem[i, :len(ms)] = ms
+        if ms:
+            ds = np.asarray(batch(
+                np.repeat(net.data[pid][None], len(ms), 0), net.data[ms]))
+            mdist[i, :len(ms)] = ds
+            radius[i] = float(ds.max())
+    return FlatNet(
+        pivots=np.asarray(net.data[pivot_ids]),
+        pivot_radius=radius,
+        members=mem, member_dist=mdist,
+        data=np.asarray(net.data), n_pivots=P, dist_name=net.dist.name)
+
+
+def _batch_dist(dist_name: str, qs, xs, interpret=True):
+    """Batched distance via the Pallas kernels (or plain L2)."""
+    mode = _MODE_OF[dist_name]
+    if mode is None:
+        diff = qs.astype(jnp.float32) - xs.astype(jnp.float32)
+        while diff.ndim > 1:
+            diff = jnp.sum(diff * diff, -1)
+        return jnp.sqrt(jnp.maximum(diff, 0.0))
+    from repro.kernels import ops
+    return ops.wavefront(qs, xs, mode, interpret=interpret)
+
+
+def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
+                       capacity: Optional[int] = None, interpret: bool = True
+                       ) -> Tuple[np.ndarray, dict]:
+    """Batched exact range query on one shard.
+
+    Returns (hits (Q, N) bool, stats).  ``capacity`` is the static budget of
+    survivor evaluations; on overflow the query is retried with 2x budget
+    (each retry is one recompile — production sets it from telemetry).
+    """
+    Q = qs.shape[0]
+    N = len(flat.data)
+    if capacity is None:
+        capacity = max(64, N // 4) * Q
+    mem_valid = flat.members >= 0                     # (P, M)
+    mem_safe = np.maximum(flat.members, 0)
+
+    def run(cap: int):
+        return _device_query_jit(
+            jnp.asarray(qs), jnp.asarray(flat.pivots),
+            jnp.asarray(flat.pivot_radius), jnp.asarray(mem_safe),
+            jnp.asarray(mem_valid), jnp.asarray(flat.member_dist),
+            jnp.asarray(flat.data), float(eps), cap, flat.dist_name,
+            interpret)
+
+    cap = int(capacity)
+    while True:
+        hits, n_need, n_evals = run(cap)
+        if int(n_need) <= cap:
+            break
+        cap *= 2
+    stats = {"pivot_evals": Q * flat.n_pivots,
+             "member_evals": int(n_evals),
+             "capacity": cap,
+             "total_evals": Q * flat.n_pivots + int(n_evals)}
+    return np.asarray(hits), stats
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnums=(7, 8, 9, 10))
+def _device_query_jit(qs, pivots, pradius, members, mem_valid, mem_dist,
+                      data, eps, capacity, dist_name, interpret):
+    Q = qs.shape[0]
+    P, M = members.shape
+    N = data.shape[0]
+    # 1. queries x pivots
+    qs_rep = jnp.repeat(qs, P, axis=0)
+    pv_rep = jnp.tile(pivots, (Q,) + (1,) * (pivots.ndim - 1))
+    dp = _batch_dist(dist_name, qs_rep, pv_rep, interpret).reshape(Q, P)
+    # 2. pivot verdicts
+    acc_all = dp + pradius[None, :] <= eps            # accept whole list
+    prune_all = dp - pradius[None, :] > eps
+    undecided = ~(acc_all | prune_all)
+    # 3. member ring bounds for undecided pivots
+    lo = jnp.abs(dp[:, :, None] - mem_dist[None, :, :])   # (Q, P, M)
+    hi = dp[:, :, None] + mem_dist[None, :, :]
+    member_live = mem_valid[None, :, :] & undecided[:, :, None]
+    accept_m = member_live & (hi <= eps)
+    need_eval = member_live & (lo <= eps) & (hi > eps)
+    # scatter free verdicts into the (Q, N) hit mask
+    hits = jnp.zeros((Q, N), bool)
+    qq = jnp.broadcast_to(jnp.arange(Q)[:, None, None], (Q, P, M)).reshape(-1)
+    ww = jnp.broadcast_to(members[None], (Q, P, M)).reshape(-1)
+    free_in = ((acc_all[:, :, None] & mem_valid[None]) | accept_m).reshape(-1)
+    hits = hits.at[qq, ww].max(free_in)
+    # 4. compact survivors and evaluate
+    flat_need = need_eval.reshape(-1)
+    n_need = jnp.sum(flat_need)
+    sel = jnp.nonzero(flat_need, size=capacity, fill_value=0)[0]
+    valid_sel = flat_need[sel]
+    q_of = sel // (P * M)
+    pm = sel % (P * M)
+    w_of = members.reshape(-1)[pm]
+    d = _batch_dist(dist_name, qs[q_of], data[w_of], interpret)
+    good = valid_sel & (d <= eps)
+    hits = hits.at[q_of, w_of].max(good)
+    return hits, n_need, jnp.sum(valid_sel)
+
+
+def host_reference_hits(flat: FlatNet, qs: np.ndarray, eps: float
+                        ) -> np.ndarray:
+    """Oracle: exact (Q, N) hit mask by brute force (numpy backend)."""
+    batch = np_backend.batch_for(flat.dist_name)
+    Q, N = qs.shape[0], len(flat.data)
+    out = np.zeros((Q, N), bool)
+    for i in range(Q):
+        ds = np.asarray(batch(np.repeat(qs[i][None], N, 0), flat.data))
+        out[i] = ds <= eps
+    return out
+
+
+# -- fleet (multi-shard) version ---------------------------------------------
+
+def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
+                      *, dead: Tuple[int, ...] = (), **kw):
+    """Union of per-shard device queries (shards partition the windows).
+
+    ``dead`` shards are skipped (the elastic layer rebuilds them); the
+    returned mask is per-shard so the caller can re-issue stolen work.
+    """
+    results = []
+    stats = []
+    for i, f in enumerate(flats):
+        if i in dead:
+            results.append(None)
+            stats.append(None)
+            continue
+        h, s = device_range_query(f, qs, eps, **kw)
+        results.append(h)
+        stats.append(s)
+    return results, stats

@@ -1,0 +1,90 @@
+"""Embedding-space subsequence retrieval — the paper's framework applied to
+model hidden states (the integration point between the two halves of this
+system; DESIGN.md §2).
+
+Hidden-state windows are fixed-length sequences over (R^d, L2); Euclidean is
+metric AND consistent (paper §4), so the full stack applies: windows ->
+reference net -> range/NN queries.  Because the windows all share one
+length, the degenerate-but-legal Euclidean case of the framework applies
+(paper §5 notes its alignment rigidity; for same-length embedding windows
+that rigidity is exactly what's wanted).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.counter import CountedDistance
+from repro.core.refnet import ReferenceNet
+from repro.core.segmentation import Window
+from repro.distances import get
+from repro.models.layers import Ctx, NOCTX
+
+
+def embed_windows(model, params, cfg, token_seqs: Sequence[np.ndarray],
+                  window: int, *, ctx: Ctx = NOCTX, stride: Optional[int] = None,
+                  normalize: bool = True) -> Tuple[np.ndarray, List[Window]]:
+    """Run the model, mean-pool hidden states over fixed windows.
+
+    Returns (windows (N, d) float32, metadata).  Window = contiguous span of
+    ``window`` tokens; stride defaults to the window (non-overlapping,
+    matching the paper's database segmentation).
+    """
+    stride = stride or window
+    fwd = jax.jit(lambda p, b: model.forward(p, b, cfg, ctx,
+                                             return_hidden=True))
+    feats, meta = [], []
+    for sid, toks in enumerate(token_seqs):
+        toks = np.asarray(toks)[None, :]
+        h = np.asarray(fwd(params, {"tokens": jnp.asarray(toks)})[0],
+                       np.float32)  # (S, d)
+        for start in range(0, h.shape[0] - window + 1, stride):
+            w = h[start:start + window].mean(axis=0)
+            feats.append(w)
+            meta.append(Window(seq_id=sid, start=start, length=window))
+    out = np.stack(feats)
+    if normalize:
+        out /= np.maximum(np.linalg.norm(out, axis=1, keepdims=True), 1e-9)
+    return out, meta
+
+
+class EmbeddingRetriever:
+    """Reference net over pooled hidden-state windows (Euclidean)."""
+
+    def __init__(self, vectors: np.ndarray, meta: List[Window], *,
+                 eps_prime: float = 0.05, num_max: Optional[int] = 5,
+                 tight_bounds: bool = True):
+        self.meta = meta
+        dist = get("euclidean")
+        # each "sequence" is one pooled vector: (N, d) -> length-d series? no:
+        # treat each vector as a length-1 sequence of d-dim elements so the
+        # registry distance applies; equivalently plain L2 over (N, d).
+        self.counter = CountedDistance(dist, vectors[:, None, :])
+        self.net = ReferenceNet(dist, vectors[:, None, :],
+                                eps_prime=eps_prime, num_max=num_max,
+                                tight_bounds=tight_bounds,
+                                counter=self.counter).build()
+
+    def query(self, vec: np.ndarray, eps: float) -> List[Tuple[Window, int]]:
+        hits = self.net.range_query(vec[None, :], eps)
+        return [(self.meta[i], i) for i in hits]
+
+    def nearest(self, vec: np.ndarray, eps_max: float = 2.0,
+                tol: float = 1e-3):
+        lo, hi = 0.0, eps_max
+        if not self.query(vec, hi):
+            return None
+        while hi - lo > tol:
+            mid = 0.5 * (lo + hi)
+            if self.query(vec, mid):
+                hi = mid
+            else:
+                lo = mid
+        hits = self.query(vec, hi)
+        ds = self.counter.eval(vec[None, :], [i for _, i in hits])
+        best = int(np.argmin(ds))
+        return hits[best][0], float(ds[best])

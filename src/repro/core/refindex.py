@@ -1,0 +1,90 @@
+"""Reference-based indexing baseline (Venkateswaran et al., VLDB'06).
+
+The paper's other comparison point: pick ``k`` references, precompute the
+full (k x N) distance table, and prune with the triangle inequality
+|d(Q, r) - d(r, X)| > eps  =>  d(Q, X) > eps.  Space is O(kN) — the paper's
+point is that the reference net achieves better pruning with O(N) space.
+
+Reference selection uses the Maximum Variance heuristic (paper §8.2 uses MV
+because Maximum Pruning needs a training query set): greedily pick the
+candidate whose distance vector over a sample has maximal variance,
+discounting redundancy with already-picked references.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.counter import CountedDistance
+from repro.distances import base as dist_base
+
+
+class MVReferenceIndex:
+    def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
+                 n_refs: int = 5, sample: int = 256, seed: int = 0,
+                 counter: Optional[CountedDistance] = None):
+        dist_base.require_metric(dist.name)
+        self.dist = dist
+        self.counter = counter or CountedDistance(dist, data)
+        self.data = self.counter.data
+        self.n_refs = n_refs
+        self._rng = np.random.default_rng(seed)
+        self._sample = sample
+        self.refs: List[int] = []
+        self.table: Optional[np.ndarray] = None  # (n_refs, N)
+
+    def build(self) -> "MVReferenceIndex":
+        N = len(self.data)
+        cand = self._rng.choice(N, size=min(4 * self.n_refs, N), replace=False)
+        samp = self._rng.choice(N, size=min(self._sample, N), replace=False)
+        # variance of each candidate's distance profile over the sample
+        # (build-time cost; not part of query-time eval counts)
+        scores = []
+        profiles = []
+        for c in cand:
+            d = self.counter.eval(self.data[c], samp)
+            profiles.append(d)
+            scores.append(float(np.var(d)))
+        order = np.argsort(scores)[::-1]
+        picked: List[int] = []
+        for o in order:
+            if len(picked) >= self.n_refs:
+                break
+            # redundancy discount: skip candidates highly correlated with
+            # an already-picked reference profile
+            if any(np.corrcoef(profiles[o], profiles[p])[0, 1] > 0.95
+                   for p in picked):
+                continue
+            picked.append(int(o))
+        while len(picked) < self.n_refs:
+            extra = [int(o) for o in order if int(o) not in picked]
+            if not extra:
+                break
+            picked.append(extra[0])
+        self.refs = [int(cand[p]) for p in picked]
+        rows = [self.counter.eval(self.data[r], np.arange(N))
+                for r in self.refs]
+        self.table = np.stack(rows)
+        self.counter.reset()  # query-time accounting starts clean
+        return self
+
+    def range_query(self, q: np.ndarray, eps: float,
+                    q_len: Optional[int] = None) -> List[int]:
+        assert self.table is not None, "call build() first"
+        dq = self.counter.eval(q, self.refs, q_len)  # k evals
+        lower = np.max(np.abs(dq[:, None] - self.table), axis=0)
+        surv = np.nonzero(lower <= eps)[0]
+        if surv.size == 0:
+            return []
+        dd = self.counter.eval(q, surv, q_len)
+        return sorted(int(i) for i in surv[dd <= eps])
+
+    def stats(self) -> dict:
+        return {
+            "n_objects": len(self.data),
+            "n_refs": self.n_refs,
+            "table_entries": int(self.table.size) if self.table is not None else 0,
+            "size_bytes": 4 * int(self.table.size) if self.table is not None else 0,
+        }

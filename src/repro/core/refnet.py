@@ -1,0 +1,435 @@
+"""The Reference Net (paper §6 + Appendix A) — host-mode implementation.
+
+A hierarchical metric index with levels ``i = 0 .. r-1``:
+
+* level radius ``eps_i = eps' * 2**i``;
+* *inclusive*: every reference at level i-1 is within ``eps_i`` of at least
+  one level-i reference (it has >= 1 parent);
+* *exclusive*: two references at the same level i are > ``eps_i`` apart;
+* a node may have **multiple parents** (the net/tree distinction of Fig. 2),
+  capped at ``num_max`` to keep space linear;
+* the bottom layer holds *all* database objects: an object within ``eps_0``
+  of some level-0 reference is stored as a plain member of that reference's
+  list, otherwise it becomes a level-0 (or higher) reference itself;
+* each reference is stored once, at its highest level (paper §6), and each
+  list link records the (conceptual) level at which it was formed — in the
+  paper a reference has a separate list per level it appears at; recording
+  the attach level preserves those per-level radii in flattened storage.
+
+Range queries implement Algorithm 3 / Lemma 4 as *bound propagation*: every
+processed reference R with known d = delta(Q, R) contributes, through each
+of its list links, an interval for the child and for the child's whole
+derived subtree:
+
+    d(Q, c)        in  [d - r_link,        d + r_link]
+    d(Q, subtree)  in  [d - r_link - sr_c, d + r_link + sr_c]
+
+where, in **faithful** mode (the paper's Lemma 4), ``r_link = eps_i`` of the
+attach level and ``sr_c = eps_{level(c)+1}``; in **tight** mode (a
+beyond-paper refinement, cf. M-tree) ``r_link`` is the exact stored link
+distance and ``sr_c`` the exact maintained subtree radius.  With multiple
+parents the intervals *intersect* — this is precisely the Fig. 2 advantage:
+every additional parent is another chance to decide a child for free.
+Children are resolved lazily (objects at the very end, expandable references
+just before their own level), so every parent that gets processed
+contributes its bound before any distance evaluation is spent.
+
+All distance evaluations go through :class:`CountedDistance`, so pruning
+ratios reported by the benchmarks are exact evaluation counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.counter import CountedDistance
+from repro.distances import base as dist_base
+
+OBJ = -1  # pseudo-level of plain (non-reference) objects
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class Node:
+    idx: int                   # row in the data array
+    level: int                 # highest level at which this node is a reference
+    children: List[int]        # node idxs appearing in my list
+    child_dist: List[float]    # exact delta(me, child) per link
+    child_level: List[int]     # conceptual level the link was formed at
+    parents: List[int]         # up-links (multi-parent; len <= num_max)
+    sub_radius: float = 0.0    # exact derived-subtree radius (maintained)
+
+
+class ReferenceNet:
+    """Host-mode reference net over a fixed-length window database.
+
+    Args:
+      tight_bounds: False = paper-faithful Lemma-4 radii (eps powers);
+        True = exact link distances / subtree radii (beyond-paper, strictly
+        tighter, same O(n) space).
+    """
+
+    def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
+                 eps_prime: float = 1.0, num_max: Optional[int] = None,
+                 tight_bounds: bool = False,
+                 counter: Optional[CountedDistance] = None):
+        dist_base.require_metric(dist.name)
+        self.dist = dist
+        self.eps_prime = float(eps_prime)
+        self.num_max = num_max
+        self.tight_bounds = tight_bounds
+        self.counter = counter or CountedDistance(dist, data)
+        self.data = self.counter.data
+        self.nodes: Dict[int, Node] = {}
+        self.root: Optional[int] = None
+        self.top_level: int = 0
+
+    # -- radii ------------------------------------------------------------
+
+    def eps(self, i: int) -> float:
+        """Level radius eps_i = eps' * 2**i  (eps_{OBJ} treated as 0)."""
+        if i < 0:
+            return 0.0
+        return self.eps_prime * (2.0 ** i)
+
+    def _link_radius(self, node: Node, k: int) -> float:
+        if self.tight_bounds:
+            return node.child_dist[k]
+        return self.eps(node.child_level[k])
+
+    def _subtree_radius(self, node: Node) -> float:
+        if not node.children:
+            return 0.0
+        if self.tight_bounds:
+            return node.sub_radius
+        return self.eps(node.level + 1)
+
+    # -- construction -------------------------------------------------------
+
+    def build(self, order: Optional[Sequence[int]] = None) -> "ReferenceNet":
+        idxs = range(len(self.data)) if order is None else order
+        for i in idxs:
+            self.insert(i)
+        return self
+
+    def insert(self, idx: int) -> None:
+        """Insert object ``idx`` (Alg. 1, with the widened descent that keeps
+        the exclusive property sound for multi-parent hierarchies)."""
+        if self.root is None:
+            self.root = idx
+            self.top_level = 0
+            self.nodes[idx] = Node(idx, 0, [], [], [], [])
+            return
+        d_root = float(self.counter.pairwise(idx, [self.root])[0])
+        # grow the root's level until it covers the new point
+        while d_root > self.eps(self.top_level):
+            self.top_level += 1
+            self.nodes[self.root].level = self.top_level
+
+        # descend, keeping the *wide* frontier: refs with d <= 2*eps_i; any
+        # same-level conflict below is reachable through such ancestors
+        # (chain bound: eps_l + sum_{t=l+1..i} eps_t <= 2*eps_i).
+        frontier: Dict[int, float] = {self.root: d_root}
+        parents_at: Dict[int, Dict[int, float]] = {}
+        level = self.top_level
+        parents_at[level] = {
+            n: d for n, d in frontier.items() if d <= self.eps(level)}
+        while level > 0:
+            cand: Set[int] = set()
+            for n in frontier:
+                for c in self.nodes[n].children:
+                    if c in self.nodes and self.nodes[c].level == level - 1:
+                        cand.add(c)
+                # a reference conceptually appears at every level below its
+                # top; keep it in the running frontier
+                cand.add(n)
+            cand_new = [c for c in cand if c not in frontier]
+            dists = dict(zip(cand_new, map(float, self.counter.pairwise(
+                idx, cand_new)))) if cand_new else {}
+            dists.update({c: frontier[c] for c in cand if c in frontier})
+            level -= 1
+            frontier = {c: d for c, d in dists.items()
+                        if d <= 2.0 * self.eps(level)}
+            parents_at[level] = {
+                c: d for c, d in dists.items() if d <= self.eps(level)}
+            if not frontier:
+                break
+
+        # Alg. 1 "jumps to the lowest possible level": X becomes a reference
+        # one level below the lowest covered level m.  Exclusivity at m-1 is
+        # guaranteed: any level-(m-1) conflict would have been discovered
+        # through the wide frontier.
+        m = None
+        for l in range(0, self.top_level + 1):
+            if parents_at.get(l):
+                m = l
+                break
+        assert m is not None, "root must cover the new point after growth"
+        if m == 0:
+            # within eps_0 of a level-0 reference -> plain object (bottom)
+            self._attach(idx, OBJ, parents_at[0], attach_level=0)
+        else:
+            self._attach(idx, m - 1, parents_at[m], attach_level=m)
+
+    def _attach(self, idx: int, level: int, owners: Dict[int, float],
+                attach_level: int) -> None:
+        assert owners, "inclusive property would be violated"
+        ranked = sorted(owners.items(), key=lambda kv: kv[1])
+        if self.num_max is not None:
+            ranked = ranked[: self.num_max]
+        node = Node(idx, level, [], [], [], [p for p, _ in ranked])
+        self.nodes[idx] = node
+        for p, d in ranked:
+            pn = self.nodes[p]
+            pn.children.append(idx)
+            pn.child_dist.append(d)
+            pn.child_level.append(attach_level)
+            self._grow_radius(p, d)  # node.sub_radius starts at 0
+
+    def _grow_radius(self, p: int, new_r: float) -> None:
+        """Propagate an enlarged subtree radius up the parent DAG."""
+        pn = self.nodes[p]
+        if new_r <= pn.sub_radius:
+            return
+        pn.sub_radius = new_r
+        for gp in pn.parents:
+            gpn = self.nodes.get(gp)
+            if gpn is None:
+                continue
+            k = gpn.children.index(p)
+            self._grow_radius(gp, gpn.child_dist[k] + new_r)
+
+    # -- deletion (Alg. 2) --------------------------------------------------
+
+    def delete(self, idx: int) -> None:
+        node = self.nodes.pop(idx)
+        if idx == self.root:
+            raise NotImplementedError("root deletion requires re-rooting")
+        for p in node.parents:
+            pn = self.nodes.get(p)
+            if pn is not None:
+                k = pn.children.index(idx)
+                del pn.children[k], pn.child_dist[k], pn.child_level[k]
+        # re-home orphaned members of X's list (Alg. 2: if a member still
+        # appears in another list we do nothing, else re-insert it)
+        orphans = []
+        for k, c in enumerate(node.children):
+            cn = self.nodes.get(c)
+            if cn is None:
+                continue
+            cn.parents.remove(idx)
+            if not cn.parents:
+                orphans.append(c)
+        for c in orphans:
+            cn = self.nodes.pop(c)
+            sub = [(g, cn.child_dist[k], cn.child_level[k])
+                   for k, g in enumerate(cn.children)]
+            self.insert(c)
+            new_cn = self.nodes[c]
+            for g, gd, gl in sub:
+                gn = self.nodes.get(g)
+                if gn is not None:
+                    new_cn.children.append(g)
+                    new_cn.child_dist.append(gd)
+                    new_cn.child_level.append(gl)
+                    gn.parents.append(c)
+                    self._grow_radius(c, gd + gn.sub_radius)
+
+    # -- range query (Alg. 3 as bound propagation) ---------------------------
+
+    def range_query(self, q: np.ndarray, eps: float,
+                    q_len: Optional[int] = None) -> List[int]:
+        """All object idxs X with delta(q, X) <= eps."""
+        if self.root is None:
+            return []
+        known: Dict[int, float] = {}   # exact distances (each counted once)
+        lo: Dict[int, float] = {}      # accumulated object lower bounds
+        hi: Dict[int, float] = {}      # accumulated object upper bounds
+        slo: Dict[int, float] = {}     # subtree lower bounds
+        shi: Dict[int, float] = {}     # subtree upper bounds
+        closed: Set[int] = set()       # whole-subtree verdict settled
+        decided: Set[int] = set()      # object verdict settled
+        results: List[int] = []
+
+        def eval_batch(idxs: List[int]) -> None:
+            new = sorted(set(i for i in idxs if i not in known))
+            if new:
+                ds = self.counter.eval(q, new, q_len)
+                known.update(zip(new, map(float, ds)))
+
+        def settle_subtree(n: int, accept: bool) -> None:
+            stack = [n]
+            while stack:
+                x = stack.pop()
+                if x in closed:
+                    continue
+                closed.add(x)
+                if x not in decided:
+                    decided.add(x)
+                    if accept:
+                        results.append(x)
+                stack.extend(self.nodes[x].children)
+
+        def decide(x: int, inside: bool) -> None:
+            if x in decided:
+                return
+            decided.add(x)
+            if inside:
+                results.append(x)
+
+        eval_batch([self.root])
+        d_root = known[self.root]
+        decide(self.root, d_root <= eps)
+        alive: Set[int] = {self.root}
+        pending_leaf: Set[int] = set()     # objects awaiting final verdict
+
+        for level in range(self.top_level, -1, -1):
+            # evaluate deferred expandable children whose level is reached
+            defer = [c for c in alive
+                     if c not in known and c not in closed
+                     and self.nodes[c].level == level]
+            eval_batch(defer)
+            for c in defer:
+                d = known[c]
+                decide(c, d <= eps)
+
+            for n in sorted(c for c in alive
+                            if self.nodes[c].level == level):
+                alive.discard(n)
+                if n in closed:
+                    continue
+                node = self.nodes[n]
+                d = known[n]
+                sr = self._subtree_radius(node)
+                if d + sr <= eps:
+                    settle_subtree(n, accept=True)
+                    continue
+                if d - sr > eps:
+                    # n itself was decided exactly; only descendants settle
+                    for c in node.children:
+                        settle_subtree(c, accept=False)
+                    closed.add(n)
+                    continue
+                for k, c in enumerate(node.children):
+                    if c in closed:
+                        continue
+                    cn = self.nodes.get(c)
+                    if cn is None:
+                        continue
+                    r = self._link_radius(node, k)
+                    src = self._subtree_radius(cn)
+                    lo[c] = max(lo.get(c, 0.0), d - r)
+                    hi[c] = min(hi.get(c, INF), d + r)
+                    slo[c] = max(slo.get(c, 0.0), d - r - src)
+                    shi[c] = min(shi.get(c, INF), d + r + src)
+                    if shi[c] <= eps:
+                        settle_subtree(c, accept=True)
+                        continue
+                    if slo[c] > eps:
+                        settle_subtree(c, accept=False)
+                        continue
+                    if hi[c] <= eps:
+                        decide(c, True)
+                    elif lo[c] > eps:
+                        decide(c, False)
+                    if cn.children:
+                        alive.add(c)       # expandable: deferred to its level
+                    elif c not in decided:
+                        pending_leaf.add(c)
+                closed.add(n)
+
+        # final object verdicts for leaves no parent managed to decide free
+        rem = [c for c in pending_leaf if c not in decided and c not in closed]
+        eval_batch(rem)
+        for c in rem:
+            decide(c, known[c] <= eps)
+        return sorted(results)
+
+    def _subtree(self, n: int, include_self: bool = True) -> List[int]:
+        out = [n] if include_self else []
+        stack = list(self.nodes[n].children)
+        seen = set(stack)
+        while stack:
+            c = stack.pop()
+            out.append(c)
+            cn = self.nodes.get(c)
+            if cn:
+                for g in cn.children:
+                    if g not in seen:
+                        seen.add(g)
+                        stack.append(g)
+        return out
+
+    # -- invariants & stats (used by tests / benchmarks) ----------------------
+
+    def check_invariants(self) -> None:
+        levels: Dict[int, List[int]] = {}
+        for n in self.nodes.values():
+            levels.setdefault(n.level, []).append(n.idx)
+        # exclusive
+        for l, members in levels.items():
+            if l < 0 or len(members) < 2:
+                continue
+            eps_l = self.eps(l)
+            for a_i, a in enumerate(members):
+                rest = members[a_i + 1:]
+                ds = np.asarray(self.counter._batch(
+                    np.repeat(self.data[a][None], len(rest), 0),
+                    self.data[rest]))
+                if np.any(ds <= eps_l):
+                    bad = rest[int(np.argmax(ds <= eps_l))]
+                    raise AssertionError(
+                        f"exclusive violated at level {l}: {a} vs {bad}")
+        # inclusive + link metadata consistency
+        for n in self.nodes.values():
+            if n.idx != self.root:
+                assert n.parents, f"node {n.idx} has no parent"
+                if self.num_max is not None:
+                    assert len(n.parents) <= self.num_max
+            for k, c in enumerate(n.children):
+                cn = self.nodes.get(c)
+                if cn is None:
+                    continue
+                d = float(self.counter._batch(
+                    self.data[n.idx][None], self.data[c][None])[0])
+                assert abs(d - n.child_dist[k]) <= 1e-3, \
+                    f"stored link distance wrong for {n.idx}->{c}"
+                assert d <= self.eps(n.child_level[k]) + 1e-4, \
+                    f"link {n.idx}->{c} exceeds its attach-level radius"
+        # subtree radii are genuine upper bounds
+        for n in self.nodes.values():
+            sub = self._subtree(n.idx, include_self=False)
+            if not sub:
+                continue
+            ds = np.asarray(self.counter._batch(
+                np.repeat(self.data[n.idx][None], len(sub), 0),
+                self.data[sub]))
+            assert np.all(ds <= n.sub_radius + 1e-3), \
+                f"sub_radius understates subtree extent at {n.idx}"
+            assert np.all(ds <= self.eps(n.level + 1) + 1e-3), \
+                f"Lemma-4 radius violated at {n.idx}"
+        # reachability
+        reach = set(self._subtree(self.root))
+        missing = set(self.nodes) - reach
+        assert not missing, f"unreachable nodes: {sorted(missing)[:5]}"
+
+    def stats(self) -> Dict[str, float]:
+        n_list_entries = sum(len(n.children) for n in self.nodes.values())
+        n_refs = sum(1 for n in self.nodes.values() if n.level >= 0)
+        parents = [len(n.parents) for n in self.nodes.values()
+                   if n.idx != self.root]
+        return {
+            "n_objects": len(self.nodes),
+            "n_references": n_refs,
+            "n_levels": self.top_level + 1,
+            "n_list_entries": n_list_entries,
+            "avg_parents": float(np.mean(parents)) if parents else 0.0,
+            "max_parents": int(np.max(parents)) if parents else 0,
+            # per link: child idx (8B) + distance (4B) + level (4B); per node:
+            # idx/level/radius/record overhead ~24B
+            "size_bytes": 16 * n_list_entries + 24 * len(self.nodes),
+        }

@@ -1,0 +1,1 @@
+from repro.distances.base import Distance, get, names, require_consistent, require_metric  # noqa: F401

@@ -1,0 +1,165 @@
+"""Anti-diagonal wavefront evaluation of alignment DPs (DTW/ERP/DFD/Levenshtein).
+
+The four alignment distances used by the paper share one dynamic program over
+an (Lx+1) x (Ly+1) table D, where D[i, j] relates prefixes x[:i] and y[:j].
+They differ only in
+
+* the border values D[i, 0], D[0, j],
+* the cell ``combine`` rule.
+
+A CPU implementation walks the table row-major; that serialises every cell.
+On TPU we sweep **anti-diagonals**: diagonal k = i + j depends only on
+diagonals k-1 and k-2, so each of the Lx+Ly steps is one fully vectorised
+(B, Lx+1) min/add over the whole batch of DP problems — which is exactly the
+shape of work the VPU wants.  The same schedule is implemented as a Pallas
+VMEM kernel in ``repro.kernels.wavefront``; this module is the pure-jnp
+engine (and the oracle the kernel is tested against).
+
+Variable lengths are supported by padding to a common (Lx, Ly) and reading
+the answer off diagonal len_x + len_y at position len_x.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.4e37)  # quasi-infinity that survives adds without NaN
+
+
+def _diag_gather(mat: jnp.ndarray, k, ii: jnp.ndarray) -> jnp.ndarray:
+    """Gather mat[b, i-1, k-i-1] for each diagonal position i in ``ii``.
+
+    Entries falling outside the Lx x Ly cost tile are returned as 0 (they are
+    masked out of the DP by the border/validity logic).
+    """
+    B, Lx, Ly = mat.shape
+    ci = ii - 1
+    cj = k - ii - 1
+    valid = (ci >= 0) & (cj >= 0) & (ci < Lx) & (cj < Ly)
+    flat = jnp.clip(ci, 0, Lx - 1) * Ly + jnp.clip(cj, 0, Ly - 1)
+    out = jnp.take(mat.reshape(B, Lx * Ly), flat, axis=1)
+    return jnp.where(valid[None, :], out, 0.0)
+
+
+def _shift_right(v: jnp.ndarray) -> jnp.ndarray:
+    """v[i] -> v[i-1], injecting +inf at i = 0."""
+    return jnp.concatenate([jnp.full_like(v[:, :1], BIG), v[:, :-1]], axis=1)
+
+
+def wavefront_dp(
+    cost: jnp.ndarray,
+    combine: Callable,
+    border_col: jnp.ndarray,
+    border_row: jnp.ndarray,
+    len_x: jnp.ndarray,
+    len_y: jnp.ndarray,
+    gap_x: Optional[jnp.ndarray] = None,
+    gap_y: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Run the generic wavefront DP.
+
+    Args:
+      cost:       (B, Lx, Ly) elementwise cost tile c(x_i, y_j).
+      combine:    f(c, c_du, c_dl, dd, du, dl) -> new cell value, where
+                  dd = D[i-1,j-1], du = D[i-1,j], dl = D[i,j-1].
+      border_col: (B, Lx+1) with border_col[:, i] = D[i, 0].
+      border_row: (B, Ly+1) with border_row[:, j] = D[0, j].
+      len_x/len_y: (B,) int actual lengths (len_x <= Lx, len_y <= Ly).
+      gap_x:      (B, Lx) optional per-element gap cost for the du move (ERP).
+      gap_y:      (B, Ly) optional per-element gap cost for the dl move (ERP).
+
+    Returns:
+      (B,) final D[len_x, len_y] per batch element.
+    """
+    B, Lx, Ly = cost.shape
+    ii = jnp.arange(Lx + 1)
+    target_k = len_x + len_y  # diagonal holding the answer
+
+    diag0 = jnp.full((B, Lx + 1), BIG, cost.dtype).at[:, 0].set(border_col[:, 0])
+
+    # Answer for degenerate len_x = len_y = 0 lives on diagonal 0.
+    res0 = jnp.where(target_k == 0, diag0[:, 0], BIG)
+
+    # Gap cost for the du move is indexed by diagonal position only:
+    # pos i uses gap_x[i-1] (independent of k).
+    gxv = None
+    if gap_x is not None:
+        gxv = jnp.concatenate([jnp.zeros((B, 1), cost.dtype), gap_x], axis=1)
+
+    def step(carry, k):
+        d1, d2, res = carry  # diagonals k-1 and k-2
+        c = _diag_gather(cost, k, ii)
+        dd = _shift_right(d2)
+        du = _shift_right(d1)
+        dl = d1
+        c_du = gxv if gxv is not None else None
+        c_dl = None
+        if gap_y is not None:
+            # gap_y gathered along the diagonal: position i -> gap_y[k-i-1]
+            cj = k - ii - 1
+            validj = (cj >= 0) & (cj < Ly)
+            c_dl = jnp.take(gap_y, jnp.clip(cj, 0, Ly - 1), axis=1)
+            c_dl = jnp.where(validj[None, :], c_dl, 0.0)
+        new = combine(c, c_du, c_dl, dd, du, dl)
+        # Borders: i = k is column j = 0; i = 0 is row j = k.
+        new = jnp.where((ii == k)[None, :] & (k <= Lx),
+                        border_col[:, jnp.minimum(k, Lx)][:, None], new)
+        new = jnp.where((ii == 0)[None, :],
+                        jnp.where(k <= Ly,
+                                  border_row[:, jnp.minimum(k, Ly)][:, None],
+                                  BIG),
+                        new)
+        # Mask positions outside the valid band i in [max(0, k-Ly), min(k, Lx)].
+        invalid = (ii > k) | (ii < k - Ly)
+        new = jnp.where(invalid[None, :], BIG, new)
+        # Record the answer when this diagonal holds it.
+        val = jnp.take_along_axis(new, len_x[:, None], axis=1)[:, 0]
+        res = jnp.where(target_k == k, val, res)
+        return (new, d1, res), None
+
+    dinit = jnp.full((B, Lx + 1), BIG, cost.dtype)
+    (d_last, _, res), _ = jax.lax.scan(
+        step, (diag0, dinit, res0), jnp.arange(1, Lx + Ly + 1))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Cost tiles
+# ---------------------------------------------------------------------------
+
+def l2_cost(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
+    """(B,Lx,d),(B,Ly,d) -> (B,Lx,Ly) pairwise Euclidean element cost."""
+    diff = xs[:, :, None, :] - ys[:, None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def neq_cost(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
+    """(B,Lx),(B,Ly) int tokens -> (B,Lx,Ly) 0/1 substitution cost."""
+    return (xs[:, :, None] != ys[:, None, :]).astype(jnp.float32)
+
+
+def default_lengths(xs, len_x):
+    B, L = xs.shape[0], xs.shape[1]
+    if len_x is None:
+        return jnp.full((B,), L, jnp.int32)
+    return jnp.asarray(len_x, jnp.int32)
+
+
+def matrixify(batch_fn):
+    """Lift a paired batch distance to an all-pairs (M, N) matrix."""
+
+    def matrix(xs, ys, len_x=None, len_y=None):
+        xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+        M, N = xs.shape[0], ys.shape[0]
+        lx = default_lengths(xs, len_x)
+        ly = default_lengths(ys, len_y)
+        xs_b = jnp.repeat(xs, N, axis=0)
+        ys_b = jnp.tile(ys, (M,) + (1,) * (ys.ndim - 1))
+        lx_b = jnp.repeat(lx, N, axis=0)
+        ly_b = jnp.tile(ly, (M,))
+        return batch_fn(xs_b, ys_b, lx_b, ly_b).reshape(M, N)
+
+    return matrix

@@ -1,0 +1,119 @@
+"""Distance registry: every sequence distance used by the framework.
+
+The paper (§4) classifies distances along two axes that this registry makes
+explicit and machine-checkable:
+
+* ``consistent`` — Def. 1: for every subsequence SX of X there is a
+  subsequence SQ of Q with delta(SQ, SX) <= delta(Q, X).  Required by the
+  segmentation filter (Lemmas 1-3).
+* ``metric`` — triangle inequality + symmetry.  Required by the metric
+  indexes (reference net, cover tree, MV reference indexing).
+
+DTW is consistent but NOT metric (paper §5), so the registry lets the
+matching pipeline accept it while the index constructors reject it.
+
+Sequences are arrays:
+
+* time series: ``(l, d)`` float arrays (d >= 1);
+* strings:     ``(l,)`` integer arrays over a finite alphabet.
+
+Batched signatures (the only ones used on the hot path):
+
+* ``pair(x, y, len_x=None, len_y=None)``            -> scalar
+* ``batch(xs, ys, len_x=None, len_y=None)``          -> (B,)   paired
+* ``matrix(xs, ys, len_x=None, len_y=None)``         -> (M, N) all pairs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+_REGISTRY: Dict[str, "Distance"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Distance:
+    """A registered sequence distance."""
+
+    name: str
+    #: paired batch: (B,l,d)/(B,l) x2 -> (B,)
+    batch: Callable
+    #: all-pairs: (M,...),(N,...) -> (M,N)
+    matrix: Callable
+    metric: bool
+    consistent: bool
+    #: operates on integer token sequences (strings) rather than R^d series
+    string: bool
+    #: supports unequal lengths (alignment-based distances)
+    variable_length: bool
+    doc: str = ""
+
+    def pair(self, x, y, len_x=None, len_y=None):
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        len_x = x.shape[0] if len_x is None else len_x
+        len_y = y.shape[0] if len_y is None else len_y
+        L = max(x.shape[0], y.shape[0])
+        x = _pad_to(x, L)
+        y = _pad_to(y, L)
+        return self.batch(x[None], y[None],
+                          jnp.asarray([len_x]), jnp.asarray([len_y]))[0]
+
+
+def _pad_to(x: jnp.ndarray, L: int) -> jnp.ndarray:
+    if x.shape[0] == L:
+        return x
+    pad = [(0, L - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def register(dist: Distance) -> Distance:
+    if dist.name in _REGISTRY:
+        raise ValueError(f"distance {dist.name!r} already registered")
+    _REGISTRY[dist.name] = dist
+    return dist
+
+
+def get(name: str) -> Distance:
+    # import for registration side effects
+    from repro.distances import lp, dtw, erp, frechet, levenshtein  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown distance {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names():
+    from repro.distances import lp, dtw, erp, frechet, levenshtein  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def require_metric(name: str) -> Distance:
+    """Fetch a distance for use inside a metric index (paper §5, §6).
+
+    Raises if the distance does not obey the triangle inequality — e.g. DTW,
+    which the paper explicitly excludes from the indexed path.
+    """
+    d = get(name)
+    if not d.metric:
+        raise ValueError(
+            f"distance {name!r} is not a metric; the reference net / cover "
+            "tree / MV index require metricity (paper §5). Use the "
+            "segmentation filter with a linear scan instead."
+        )
+    return d
+
+
+def require_consistent(name: str) -> Distance:
+    """Fetch a distance for use with the segmentation filter (Lemmas 1-3)."""
+    d = get(name)
+    if not d.consistent:
+        raise ValueError(
+            f"distance {name!r} is not consistent; the segmentation filter "
+            "requires consistency (paper Def. 1)."
+        )
+    return d

@@ -1,0 +1,46 @@
+"""Dynamic Time Warping.
+
+Consistent (paper §4) but NOT metric (paper §3.3/§5): usable with the
+segmentation filter + linear scan, rejected by the metric indexes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distances import base
+from repro.distances._wavefront import (
+    BIG, default_lengths, l2_cost, matrixify, wavefront_dp)
+
+
+def _combine(c, c_du, c_dl, dd, du, dl):
+    return c + jnp.minimum(dd, jnp.minimum(du, dl))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dtw_batch(xs, ys, len_x=None, len_y=None):
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    if xs.ndim == 2:  # scalar series -> (B, L, 1)
+        xs, ys = xs[..., None], ys[..., None]
+    B, L = xs.shape[0], xs.shape[1]
+    lx = default_lengths(xs, len_x)
+    ly = default_lengths(ys, len_y)
+    cost = l2_cost(xs, ys)
+    border = jnp.full((B, L + 1), BIG, jnp.float32).at[:, 0].set(0.0)
+    return wavefront_dp(cost, _combine, border, border, lx, ly)
+
+
+dtw = base.register(base.Distance(
+    name="dtw",
+    batch=dtw_batch,
+    matrix=matrixify(dtw_batch),
+    metric=False,
+    consistent=True,
+    string=False,
+    variable_length=True,
+    doc="Dynamic Time Warping; element cost = Euclidean",
+))

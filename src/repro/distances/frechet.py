@@ -1,0 +1,43 @@
+"""Discrete Frechet distance (Eiter & Mannila 1994).
+
+Metric and consistent (paper §4): the max-of-couplings alignment distance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distances import base
+from repro.distances._wavefront import (
+    BIG, default_lengths, l2_cost, matrixify, wavefront_dp)
+
+
+def _combine(c, c_du, c_dl, dd, du, dl):
+    return jnp.maximum(c, jnp.minimum(dd, jnp.minimum(du, dl)))
+
+
+@jax.jit
+def frechet_batch(xs, ys, len_x=None, len_y=None):
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    if xs.ndim == 2:
+        xs, ys = xs[..., None], ys[..., None]
+    B, L = xs.shape[0], xs.shape[1]
+    lx = default_lengths(xs, len_x)
+    ly = default_lengths(ys, len_y)
+    cost = l2_cost(xs, ys)
+    border = jnp.full((B, L + 1), BIG, jnp.float32).at[:, 0].set(0.0)
+    return wavefront_dp(cost, _combine, border, border, lx, ly)
+
+
+frechet = base.register(base.Distance(
+    name="frechet",
+    batch=frechet_batch,
+    matrix=matrixify(frechet_batch),
+    metric=True,
+    consistent=True,
+    string=False,
+    variable_length=True,
+    doc="Discrete Frechet distance (DFD); metric",
+))

@@ -1,0 +1,42 @@
+"""Levenshtein (edit) distance over integer token sequences.
+
+Metric and consistent (paper §4): the paper's string-database distance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distances import base
+from repro.distances._wavefront import (
+    default_lengths, matrixify, neq_cost, wavefront_dp)
+
+
+def _combine(c, c_du, c_dl, dd, du, dl):
+    return jnp.minimum(dd + c, jnp.minimum(du + 1.0, dl + 1.0))
+
+
+@jax.jit
+def levenshtein_batch(xs, ys, len_x=None, len_y=None):
+    xs = jnp.asarray(xs, jnp.int32)
+    ys = jnp.asarray(ys, jnp.int32)
+    B, L = xs.shape
+    lx = default_lengths(xs, len_x)
+    ly = default_lengths(ys, len_y)
+    cost = neq_cost(xs, ys)
+    ar = jnp.arange(L + 1, dtype=jnp.float32)[None, :]
+    border = jnp.broadcast_to(ar, (B, L + 1))
+    return wavefront_dp(cost, _combine, border, border, lx, ly)
+
+
+levenshtein = base.register(base.Distance(
+    name="levenshtein",
+    batch=levenshtein_batch,
+    matrix=matrixify(levenshtein_batch),
+    metric=True,
+    consistent=True,
+    string=True,
+    variable_length=True,
+    doc="Levenshtein / edit distance over token ids; metric",
+))

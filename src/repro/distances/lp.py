@@ -1,0 +1,75 @@
+"""Euclidean and Hamming distances (equal-length, no alignment).
+
+Both are metric and consistent (paper §4) but cannot tolerate temporal
+misalignment — the paper notes this makes them a poor fit for subsequence
+matching with shifts (§5); they remain first-class citizens here because the
+embedding-retrieval integration uses Euclidean over fixed-length hidden-state
+windows, where lengths always agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distances import base
+from repro.distances._wavefront import default_lengths, matrixify
+
+
+@jax.jit
+def euclidean_batch(xs, ys, len_x=None, len_y=None):
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    if xs.ndim == 2:
+        xs, ys = xs[..., None], ys[..., None]
+    B, L = xs.shape[0], xs.shape[1]
+    lx = default_lengths(xs, len_x)
+    mask = (jnp.arange(L)[None, :] < lx[:, None]).astype(jnp.float32)
+    d2 = jnp.sum(jnp.sum((xs - ys) ** 2, axis=-1) * mask, axis=-1)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@jax.jit
+def euclidean_matrix(xs, ys, len_x=None, len_y=None):
+    """All-pairs Euclidean via the ||x||^2 + ||y||^2 - 2 x.y identity (MXU)."""
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    xf = xs.reshape(xs.shape[0], -1)
+    yf = ys.reshape(ys.shape[0], -1)
+    xn = jnp.sum(xf * xf, axis=1)
+    yn = jnp.sum(yf * yf, axis=1)
+    d2 = xn[:, None] + yn[None, :] - 2.0 * (xf @ yf.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@jax.jit
+def hamming_batch(xs, ys, len_x=None, len_y=None):
+    xs = jnp.asarray(xs, jnp.int32)
+    ys = jnp.asarray(ys, jnp.int32)
+    B, L = xs.shape
+    lx = default_lengths(xs, len_x)
+    mask = jnp.arange(L)[None, :] < lx[:, None]
+    return jnp.sum((xs != ys) & mask, axis=-1).astype(jnp.float32)
+
+
+euclidean = base.register(base.Distance(
+    name="euclidean",
+    batch=euclidean_batch,
+    matrix=euclidean_matrix,
+    metric=True,
+    consistent=True,
+    string=False,
+    variable_length=False,
+    doc="L2 over equal-length sequences; metric",
+))
+
+hamming = base.register(base.Distance(
+    name="hamming",
+    batch=hamming_batch,
+    matrix=matrixify(hamming_batch),
+    metric=True,
+    consistent=True,
+    string=True,
+    variable_length=False,
+    doc="Hamming over equal-length token sequences; metric",
+))

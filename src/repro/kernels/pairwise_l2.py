@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: MXU-tiled pairwise Euclidean distance matrix.
+
+Used by the embedding-retrieval path: filtering M query windows against N
+database windows under L2 is ``||x||^2 + ||y||^2 - 2 x @ y.T`` — one MXU
+matmul per (128, 128) output tile with both operand tiles resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, out_ref):
+    x = x_ref[...]  # (bm, d)
+    y = y_ref[...]  # (bn, d)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)          # (bm, 1)
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T        # (1, bn)
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (bm, bn) on the MXU
+    d2 = xn + yn - 2.0 * xy
+    out_ref[...] = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def pairwise_l2_pallas(x, y, *, bm=128, bn=128, interpret=True):
+    """(M, d) x (N, d) -> (M, N); M, N padded to tile multiples by ops.py."""
+    M, d = x.shape
+    N = y.shape[0]
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``wavefront_ref`` evaluates the same fixed-length batched alignment DP the
+kernel computes, via the generic anti-diagonal engine in
+``repro.distances._wavefront`` (which is itself tested against row-major
+numpy oracles), so the kernel test chain is:
+
+    numpy row-major DP  ==  jnp wavefront engine  ==  Pallas kernel
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.distances._wavefront import BIG, l2_cost, neq_cost, wavefront_dp
+
+MODES = ("dtw", "erp", "dfd", "lev")
+
+
+def _combine_for(mode):
+    if mode == "dtw":
+        return lambda c, cu, cl, dd, du, dl: c + jnp.minimum(dd, jnp.minimum(du, dl))
+    if mode == "erp":
+        return lambda c, cu, cl, dd, du, dl: jnp.minimum(
+            dd + c, jnp.minimum(du + cu, dl + cl))
+    if mode == "dfd":
+        return lambda c, cu, cl, dd, du, dl: jnp.maximum(
+            c, jnp.minimum(dd, jnp.minimum(du, dl)))
+    if mode == "lev":
+        return lambda c, cu, cl, dd, du, dl: jnp.minimum(
+            dd + c, jnp.minimum(du + 1.0, dl + 1.0))
+    raise ValueError(mode)
+
+
+def prepare(xs, ys, mode):
+    """Common preprocessing: cost tile + borders + (erp) gap vectors."""
+    if mode == "lev":
+        xs = jnp.asarray(xs)
+        ys = jnp.asarray(ys)
+        cost = neq_cost(xs, ys)
+        B, Lx = xs.shape
+        Ly = ys.shape[1]
+        gap_x = gap_y = None
+        border_col = jnp.broadcast_to(
+            jnp.arange(Lx + 1, dtype=jnp.float32)[None, :], (B, Lx + 1))
+        border_row = jnp.broadcast_to(
+            jnp.arange(Ly + 1, dtype=jnp.float32)[None, :], (B, Ly + 1))
+        return cost, border_col, border_row, gap_x, gap_y
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    if xs.ndim == 2:
+        xs, ys = xs[..., None], ys[..., None]
+    B, Lx = xs.shape[0], xs.shape[1]
+    Ly = ys.shape[1]
+    cost = l2_cost(xs, ys)
+    if mode == "erp":
+        gap_x = jnp.sqrt(jnp.maximum(jnp.sum(xs * xs, -1), 0.0))
+        gap_y = jnp.sqrt(jnp.maximum(jnp.sum(ys * ys, -1), 0.0))
+        zero = jnp.zeros((B, 1), jnp.float32)
+        border_col = jnp.concatenate([zero, jnp.cumsum(gap_x, 1)], axis=1)
+        border_row = jnp.concatenate([zero, jnp.cumsum(gap_y, 1)], axis=1)
+    else:
+        gap_x = gap_y = None
+        border_col = jnp.full((B, Lx + 1), BIG, jnp.float32).at[:, 0].set(0.0)
+        border_row = jnp.full((B, Ly + 1), BIG, jnp.float32).at[:, 0].set(0.0)
+    return cost, border_col, border_row, gap_x, gap_y
+
+
+def wavefront_ref(xs, ys, mode: str):
+    """(B, L[, d]) x (B, L[, d]) -> (B,) full-length alignment distance."""
+    assert mode in MODES, mode
+    cost, bc, br, gx, gy = prepare(xs, ys, mode)
+    B, Lx, Ly = cost.shape
+    lx = jnp.full((B,), Lx, jnp.int32)
+    ly = jnp.full((B,), Ly, jnp.int32)
+    return wavefront_dp(cost, _combine_for(mode), bc, br, lx, ly,
+                        gap_x=gx, gap_y=gy)
+
+
+def pairwise_l2_ref(x, y):
+    """(M, d) x (N, d) -> (M, N) Euclidean distance matrix."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    xn = jnp.sum(x * x, axis=1)
+    yn = jnp.sum(y * y, axis=1)
+    d2 = xn[:, None] + yn[None, :] - 2.0 * (x @ y.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: batched anti-diagonal wavefront alignment DP.
+
+This is the paper's compute hot spot (§5/§7 step 4: every query segment is
+compared against every surviving database window under an O(l^2) alignment
+distance).  The TPU-native schedule:
+
+* the batch of independent DP problems rides the sublane axis — one grid
+  cell owns a ``(block_b, L+1)`` wavefront held in VMEM/VREGs;
+* the 2l diagonal steps are a ``fori_loop`` whose body is pure VPU work:
+  two rolling diagonal buffers, an elementwise cost slice, min/add;
+* the elementwise cost is computed **on the fly** from the x tile and a
+  *flipped* y tile: cost of diagonal k is ``elem(x[i-1], y[k-i-1])`` which is
+  a contiguous ``dynamic_slice`` of reversed-y — no gathers, no (L x L) cost
+  tile in HBM, arithmetic intensity stays on-chip;
+* borders (column j=0 / row i=0) are injected per step from precomputed
+  border vectors (constant for DTW/DFD/Lev, gap cumsums for ERP).
+
+Modes: ``dtw`` / ``erp`` / ``dfd`` / ``lev`` (paper's four alignment
+distances).  Fixed (static) lengths per call — the matching layer buckets
+query segments by length (there are only 2*lambda_0+1 lengths, §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e37  # python float: Pallas kernels must not capture traced constants
+
+
+def _shift_right(v, fill):
+    return jnp.concatenate([jnp.full_like(v[:, :1], fill), v[:, :-1]], axis=1)
+
+
+def _make_kernel(mode: str, Lx: int, Ly: int, d: int):
+    W = Lx + 1
+
+    def kernel(x_ref, yr_ref, gx_ref, gyr_ref, bc_ref, br_ref, out_ref):
+        x = x_ref[...]          # (Bt, W, d)   x[i] = x_orig[i-1]
+        yr = yr_ref[...]        # (Bt, Ypad, d) reversed+padded y
+        gx = gx_ref[...]        # (Bt, W)      ERP gap cost of x_i (else 0)
+        gyr = gyr_ref[...]      # (Bt, Ypad)   reversed+padded ERP gap of y
+        bc = bc_ref[...]        # (Bt, Lx+1)   border column D[i,0]
+        br = br_ref[...]        # (Bt, Ly+1)   border row    D[0,j]
+        Bt = x.shape[0]
+        ii = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+        diag0 = jnp.full((Bt, W), BIG, jnp.float32)
+        diag0 = diag0.at[:, 0].set(bc[:, 0])
+        dinit = jnp.full((Bt, W), BIG, jnp.float32)
+
+        def body(k, carry):
+            d1, d2 = carry  # diagonals k-1, k-2
+            s = Lx + 1 + Ly - k  # start of the diagonal window in reversed y
+            ysl = jax.lax.dynamic_slice(yr, (0, s, 0), (Bt, W, d))
+            if mode == "lev":
+                c = (jnp.sum(jnp.abs(x - ysl), axis=-1) > 0).astype(jnp.float32)
+            else:
+                c = jnp.sqrt(jnp.maximum(jnp.sum((x - ysl) ** 2, axis=-1), 0.0))
+            dd = _shift_right(d2, BIG)
+            du = _shift_right(d1, BIG)
+            dl = d1
+            if mode == "dtw":
+                new = c + jnp.minimum(dd, jnp.minimum(du, dl))
+            elif mode == "dfd":
+                new = jnp.maximum(c, jnp.minimum(dd, jnp.minimum(du, dl)))
+            elif mode == "lev":
+                new = jnp.minimum(dd + c, jnp.minimum(du + 1.0, dl + 1.0))
+            else:  # erp
+                gy = jax.lax.dynamic_slice(gyr, (0, s), (Bt, W))
+                new = jnp.minimum(dd + c, jnp.minimum(du + gx, dl + gy))
+            # border column j = 0 lives at position i = k (while k <= Lx)
+            colv = jax.lax.dynamic_slice(bc, (0, jnp.minimum(k, Lx)), (Bt, 1))
+            new = jnp.where((ii == k) & (k <= Lx), colv, new)
+            # border row i = 0 lives at position 0 (while k <= Ly)
+            rowv = jax.lax.dynamic_slice(br, (0, jnp.minimum(k, Ly)), (Bt, 1))
+            new = jnp.where(ii == 0, jnp.where(k <= Ly, rowv, BIG), new)
+            # outside the valid band
+            new = jnp.where((ii > k) | (ii < k - Ly), BIG, new)
+            return (new, d1)
+
+        d1, _ = jax.lax.fori_loop(1, Lx + Ly + 1, body, (diag0, dinit))
+        out_ref[...] = d1[:, Lx:Lx + 1]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "Lx", "Ly", "d", "block_b", "interpret"))
+def wavefront_pallas(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col,
+                     border_row, *, mode, Lx, Ly, d, block_b, interpret):
+    """Run the kernel on pre-laid-out inputs; see ``ops.wavefront``."""
+    B = x_pad.shape[0]
+    Ypad = y_rev_pad.shape[1]
+    grid = (B // block_b,)
+    kernel = _make_kernel(mode, Lx, Ly, d)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, Lx + 1, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, Ypad, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, Lx + 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, Ypad), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, Lx + 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, Ly + 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row)
+    return out[:, 0]

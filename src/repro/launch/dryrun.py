@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # LICM would hoist the CPU backend's f32 upcast of bf16 dot operands out
+    # of the layer scan, counting an f32 copy of every layer's weights/cache
+    # as simultaneously-live temp memory.  A TPU backend consumes bf16
+    # directly (MXU); disabling while-loop LICM keeps the CPU dry-run's
+    # memory_analysis() representative.  See EXPERIMENTS.md §Dry-run.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell: jit the appropriate
+step function with production in/out shardings, ``.lower()`` on
+ShapeDtypeStruct inputs, ``.compile()``, and record
+``memory_analysis()`` / ``cost_analysis()`` / collective-bytes (parsed from
+the compiled HLO) into reports/dryrun/*.json.  Resumable per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k [--multi-pod] [--force]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import SHAPES                      # noqa: E402
+from repro.launch import sharding as shd                   # noqa: E402
+from repro.launch import specs as specs_lib                # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.models import registry                          # noqa: E402
+from repro.models.layers import Ctx                        # noqa: E402
+from repro.roofline.hlo_costs import parse_hlo_costs  # noqa: E402
+from repro.train import optimizer as opt_lib               # noqa: E402
+from repro.train.train_state import make_train_step        # noqa: E402
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def runnable(cfg, shape_name: str) -> bool:
+    """DESIGN.md §Arch-applicability: long_500k needs sub-quadratic mixing."""
+    if shape_name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def _moment_dtype(cfg) -> str:
+    # bf16 moments for the largest models (see optimizer.py docstring)
+    return "bfloat16" if cfg.param_count() > 1e11 else "float32"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg, mod = registry.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    if shape.kind == "train":
+        rules = dict(shd.TRAIN_RULES)
+    else:
+        rules = dict(shd.SERVE_RULES)
+    ctx = Ctx(mesh, rules)
+
+    psp = specs_lib.param_specs(cfg, mod, mesh, rules, tp)
+    bsp = specs_lib.batch_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        mdt = _moment_dtype(cfg)
+        ocfg = opt_lib.OptConfig(state_dtype=mdt)
+        osp = specs_lib.opt_specs(
+            cfg, mod, mesh, rules, tp,
+            jnp.bfloat16 if mdt == "bfloat16" else jnp.float32)
+        step = make_train_step(mod, cfg, ocfg, ctx)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        with mesh:
+            lowered = fn.lower(psp, osp, bsp)
+    elif shape.kind == "prefill":
+        def prefill(params, batch):
+            return mod.forward(params, batch, cfg, ctx, return_cache=True)
+        fn = jax.jit(prefill)
+        with mesh:
+            lowered = fn.lower(psp, bsp)
+    else:  # decode
+        csp = specs_lib.cache_specs(cfg, mod, shape, mesh, rules, tp)
+        def decode(params, cache, batch):
+            return mod.decode_step(params, cache, batch["tokens"], cfg, ctx)
+        fn = jax.jit(decode, donate_argnums=(1,))
+        with mesh:
+            lowered = fn.lower(psp, csp, bsp)
+    return cfg, mesh, lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = REPORT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        cached = json.loads(out_path.read_text())
+        if cached.get("status") != "error":   # always retry failures
+            print(f"[skip] {out_path.name} (cached)")
+            return cached
+    cfg, _ = registry.get(arch)
+    if not runnable(cfg, shape_name):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "full-attention arch at 524k context is quadratic; "
+                         "cell runs only for SSM/hybrid (DESIGN.md "
+                         "§Arch-applicability)"}
+        REPORT_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[skip-by-design] {arch} x {shape_name}")
+        return rec
+
+    t0 = time.time()
+    try:
+        cfg, mesh, lowered = lower_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        n_dev = mesh.devices.size
+        hlo_costs = parse_hlo_costs(compiled.as_text())
+        coll = hlo_costs["collectives"]
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok",
+            "n_devices": int(n_dev),
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            },
+            "cost": {k: float(v) for k, v in cost.items()
+                     if isinstance(v, (int, float))},
+            "hlo_dot_flops": hlo_costs["flops"],
+            "hlo_dot_bytes": hlo_costs["dot_bytes"],
+            "collectives": coll,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+        }
+    except Exception as e:  # record failures; the suite keeps going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: {e}")
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    if rec["status"] == "ok":
+        print(f"[ok] {arch} x {shape_name} x {mesh_name} "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s, "
+              f"temp/dev {rec['memory']['temp_bytes']/2**30:.2f} GiB)")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis flops:", rec["cost"].get("flops"))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = registry.names()
+        shapes = list(SHAPES)
+    else:
+        archs = [args.arch] if args.arch else registry.names()
+        shapes = [args.shape] if args.shape else list(SHAPES)
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            rec = run_cell(a, s, args.multi_pod, args.force)
+            failures += rec.get("status") == "error"
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

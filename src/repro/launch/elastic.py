@@ -1,0 +1,105 @@
+"""Elastic scaling for the sharded retrieval fleet.
+
+Windows are assigned to shards by rendezvous (highest-random-weight)
+hashing: when the worker set changes, ONLY the windows whose owner changed
+move — each survivor keeps ~n/k of its data, so an N->N±1 resize rebuilds
+~1/N of the index instead of all of it.  Each shard owns an independent
+reference net (metric-space partitioning keeps range queries exact by
+union; DESIGN.md §4.3).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def _hrw_score(window_id: int, worker: str) -> int:
+    h = hashlib.blake2b(f"{window_id}:{worker}".encode(),
+                        digest_size=8).digest()
+    return int.from_bytes(h, "big")
+
+
+def assign(window_ids: Sequence[int], workers: Sequence[str]
+           ) -> Dict[str, List[int]]:
+    """Rendezvous-hash every window to a worker."""
+    out: Dict[str, List[int]] = {w: [] for w in workers}
+    for wid in window_ids:
+        best = max(workers, key=lambda w: _hrw_score(wid, w))
+        out[best].append(wid)
+    return out
+
+
+def moved_fraction(before: Dict[str, List[int]], after: Dict[str, List[int]]
+                   ) -> float:
+    owner_b = {wid: w for w, wids in before.items() for wid in wids}
+    owner_a = {wid: w for w, wids in after.items() for wid in wids}
+    moved = sum(1 for wid, w in owner_a.items()
+                if owner_b.get(wid) != w)
+    return moved / max(len(owner_a), 1)
+
+
+class ElasticIndex:
+    """A set of per-shard reference nets that reshard incrementally."""
+
+    def __init__(self, dist_name: str, data: np.ndarray, workers: List[str],
+                 *, eps_prime: float = 1.0, tight_bounds: bool = True):
+        from repro.core.refnet import ReferenceNet
+        from repro.distances import get
+        self.dist = get(dist_name)
+        self.data = np.asarray(data)
+        self.eps_prime = eps_prime
+        self.tight = tight_bounds
+        self.workers = list(workers)
+        self.assignment = assign(range(len(data)), self.workers)
+        self._net_cls = ReferenceNet
+        self.shards = {w: self._build(w) for w in self.workers}
+
+    def _build(self, worker: str):
+        ids = self.assignment[worker]
+        if not ids:
+            return None
+        net = self._net_cls(self.dist, self.data[ids],
+                            eps_prime=self.eps_prime,
+                            tight_bounds=self.tight).build()
+        net._global_ids = list(ids)
+        return net
+
+    def resize(self, workers: List[str]) -> float:
+        """Change the worker set; rebuild only shards whose content moved.
+        Returns the fraction of windows that moved."""
+        new_assign = assign(range(len(self.data)), workers)
+        frac = moved_fraction(self.assignment, new_assign)
+        new_shards = {}
+        for w in workers:
+            if w in self.shards and new_assign[w] == self.assignment.get(w):
+                new_shards[w] = self.shards[w]  # untouched shard
+            else:
+                new_shards[w] = None            # content changed: rebuild
+        self.assignment = new_assign
+        self.workers = list(workers)
+        for w in workers:
+            if new_shards[w] is None:
+                new_shards[w] = self._build(w)
+        self.shards = new_shards
+        return frac
+
+    def range_query(self, q: np.ndarray, eps: float,
+                    q_len=None, dead: Sequence[str] = ()) -> List[int]:
+        """Fleet-wide query = union over shards (exact).  ``dead`` workers
+        are skipped — results degrade gracefully and the caller can retry
+        after `resize` (fault tolerance path)."""
+        out: List[int] = []
+        for w in self.workers:
+            if w in dead or self.shards[w] is None:
+                continue
+            net = self.shards[w]
+            for local in net.range_query(q, eps, q_len):
+                out.append(net._global_ids[local])
+        return sorted(out)
+
+    def eval_count(self) -> int:
+        return sum(s.counter.count for s in self.shards.values()
+                   if s is not None)

@@ -1,0 +1,98 @@
+"""Retrieval serving driver — the paper's kind of serving: a sharded
+subsequence-retrieval fleet answering batched queries.
+
+  PYTHONPATH=src python -m repro.launch.serve --dataset proteins \
+      --n-windows 2000 --shards 4 --queries 32 --eps 2.0
+
+Builds per-shard reference nets (elastic, rendezvous-hashed), answers a
+batch of range + type-II/III queries, reports pruning ratios and latency,
+and exercises the straggler-work-stealing path with a simulated slow shard.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.matching import SubsequenceMatcher
+from repro.data import synthetic
+from repro.launch.elastic import ElasticIndex
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="proteins",
+                    choices=["proteins", "songs", "traj"])
+    ap.add_argument("--distance", default=None)
+    ap.add_argument("--n-windows", type=int, default=2000)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--eps", type=float, default=2.0)
+    args = ap.parse_args()
+
+    gen, default_dist = synthetic.DATASETS[args.dataset]
+    dist = args.distance or default_dist or "erp"
+    data = gen(args.n_windows, seed=0)
+    rng = np.random.default_rng(1)
+
+    workers = [f"worker{i}" for i in range(args.shards)]
+    t0 = time.time()
+    fleet = ElasticIndex(dist, data, workers, tight_bounds=True)
+    build_s = time.time() - t0
+
+    queries = data[rng.integers(0, len(data), args.queries)].copy()
+    if data.dtype.kind == "i":
+        flips = rng.random(queries.shape) < 0.1
+        queries[flips] = rng.integers(0, queries.max() + 1, flips.sum())
+    else:
+        queries += rng.normal(scale=0.1, size=queries.shape).astype(
+            queries.dtype)
+
+    t0 = time.time()
+    n_hits = 0
+    for q in queries:
+        n_hits += len(fleet.range_query(q, args.eps))
+    serve_s = time.time() - t0
+    evals = fleet.eval_count()
+    naive = args.queries * len(data)
+
+    # straggler mitigation: shard 0 is slow -> its queries are re-issued
+    # against the replica fleet (here: a second ElasticIndex replica)
+    replica = ElasticIndex(dist, data, workers, tight_bounds=True)
+    t0 = time.time()
+    stolen_hits = 0
+    for q in queries:
+        part = fleet.range_query(q, args.eps, dead=("worker0",))
+        # "steal" worker0's share from the replica
+        rep = replica.shards["worker0"]
+        extra = [rep._global_ids[i]
+                 for i in rep.range_query(q, args.eps)] if rep else []
+        stolen_hits += len(sorted(set(part) | set(extra)))
+    steal_s = time.time() - t0
+    assert stolen_hits == n_hits, "work stealing must preserve exactness"
+
+    # elastic resize: drop one worker, verify exactness is preserved
+    frac = fleet.resize(workers[:-1])
+    n_hits2 = sum(len(fleet.range_query(q, args.eps)) for q in queries)
+    assert n_hits2 == n_hits, "resharding must preserve exactness"
+
+    print(json.dumps({
+        "dataset": args.dataset, "distance": dist,
+        "windows": len(data), "shards": args.shards,
+        "build_s": round(build_s, 2),
+        "batch_queries": args.queries,
+        "serve_s": round(serve_s, 3),
+        "qps": round(args.queries / serve_s, 1),
+        "hits": n_hits,
+        "distance_evals": evals,
+        "evals_vs_naive": round(evals / naive, 4),
+        "steal_s": round(steal_s, 3),
+        "resize_moved_frac": round(frac, 3),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

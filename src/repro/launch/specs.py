@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` builds weak-type-correct, shardable abstract values for
+every model input — tokens/labels for training, token+cache for decode,
+precomputed frame/patch embeddings for the audio/vlm frontend stubs — with
+no device allocation (the full configs are only ever exercised this way).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.launch import sharding as shd
+from repro.models import registry
+from repro.models.params import abstract_params
+
+
+def _sds(shape, dtype, mesh, rules, *axes):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=shd.sharding(mesh, rules, *axes, shape=shape))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules
+                ) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    prefix = cfg.frontend_prefix if cfg.frontend != "none" else 0
+    if shape.kind == "train":
+        out = {
+            "tokens": _sds((B, S - prefix), jnp.int32, mesh, rules,
+                           "batch", None),
+            "labels": _sds((B, S), jnp.int32, mesh, rules, "batch", None),
+        }
+        if prefix:
+            out["embeds"] = _sds((B, prefix, cfg.d_model), jnp.bfloat16,
+                                 mesh, rules, "batch", None, None)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S - prefix), jnp.int32, mesh, rules,
+                              "batch", None)}
+        if prefix:
+            out["embeds"] = _sds((B, prefix, cfg.d_model), jnp.bfloat16,
+                                 mesh, rules, "batch", None, None)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((B, 1), jnp.int32, mesh, rules, "batch", None)}
+
+
+def cache_specs(cfg: ModelConfig, mod, shape: ShapeConfig, mesh: Mesh,
+                rules, tp: int):
+    defs = mod.cache_defs(cfg, shape.global_batch, shape.seq_len, tp)
+    def to_sds(d):
+        if d is None:
+            return None
+        return jax.ShapeDtypeStruct(
+            d.shape, jnp.bfloat16 if len(d.shape) else jnp.int32,
+            sharding=shd.sharding(mesh, rules, *d.axes, shape=d.shape))
+    return jax.tree.map(to_sds, defs,
+                        is_leaf=lambda x: x is None or hasattr(x, "axes"))
+
+
+def param_specs(cfg: ModelConfig, mod, mesh: Mesh, rules, tp: int,
+                dtype=jnp.bfloat16):
+    defs = mod.param_defs(cfg, tp)
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, dtype,
+            sharding=shd.sharding(mesh, rules, *d.axes, shape=d.shape)),
+        defs, is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def opt_specs(cfg: ModelConfig, mod, mesh: Mesh, rules, tp: int,
+              state_dtype=jnp.float32):
+    p = param_specs(cfg, mod, mesh, rules, tp, dtype=state_dtype)
+    return {
+        "m": p, "v": p,
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=shd.sharding(mesh, rules)),
+    }

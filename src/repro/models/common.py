@@ -1,0 +1,87 @@
+"""Shared model plumbing: embeddings, scan-over-layers, head padding.
+
+All models expose the same functional interface:
+
+* ``param_defs(cfg, tp)``  -> ParamDef pytree (tp = model-axis size, used to
+  pad attention heads to a shardable multiple; extra heads are masked out in
+  the forward pass so the architecture's function is unchanged);
+* ``forward(params, batch, cfg, ctx, return_cache=False)`` -> logits
+  (and caches when prefilling);
+* ``decode_step(params, cache, tokens, pos, cfg, ctx)`` -> (logits, cache);
+* ``cache_defs(cfg, B, S, tp)`` -> ParamDef pytree for the decode cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, NOCTX
+from repro.models.params import ParamDef
+
+
+def embed_defs(cfg):
+    V = cfg.vocab_padded()
+    return {
+        "tok": ParamDef((V, cfg.d_model), ("tensor", "embed")),
+        "out": ParamDef((cfg.d_model, V), ("embed", "tensor")),
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+def embed_tokens(params, tokens, cfg, ctx: Ctx):
+    h = jnp.take(params["tok"], tokens, axis=0)
+    return ctx.constrain(h, "batch", "seq", None)
+
+
+def maybe_prepend_embeds(h, batch, ctx: Ctx):
+    """Modality frontend stub: precomputed frame/patch embeddings are
+    prepended to (or replace) the token embeddings."""
+    embeds = batch.get("embeds")
+    if embeds is None:
+        return h
+    if h is None:
+        return embeds
+    return jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+
+
+def unembed(params, h, cfg, ctx: Ctx):
+    from repro.models.layers import rms_norm
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["out"])
+    return ctx.constrain(logits, "batch", "seq", "tensor")
+
+
+def head_mask(cfg, tp: int, dtype=jnp.bfloat16):
+    """1 for real heads, 0 for TP-padding heads (None if no padding)."""
+    He = cfg.heads_padded(tp)
+    if He == cfg.n_heads:
+        return None
+    m = (jnp.arange(He) < cfg.n_heads).astype(dtype)
+    return m
+
+
+def scan_blocks(block_fn, h, xs_trees: tuple, *, remat=False,
+                carry_extra=None):
+    """lax.scan over layer-stacked params.
+
+    ``xs_trees`` is a tuple of layer-stacked pytrees; the block unpacks the
+    per-layer slice tuple:  block_fn((h, extra), (p, ...)) -> ((h, extra), ys)
+    """
+    fn = block_fn
+    if remat:
+        fn = jax.checkpoint(block_fn,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    init = (h, carry_extra)
+    (h, carry_extra), ys = jax.lax.scan(fn, init, xs_trees)
+    return h, carry_extra, ys
+
+
+def stack_layer_defs(defs, n_layers: int):
+    """Prepend a 'layers' axis to every ParamDef in a block's def tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n_layers,) + d.shape, ("layers",) + d.axes,
+                           init=d.init, fan_in=d.fan_in),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))

@@ -1,0 +1,166 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention+MLP
+block applied every ``attn_every`` SSM blocks (weight re-use across
+applications — the Zamba trick).  Each application keeps its own KV cache
+at decode; SSM layers keep O(1) state, so long-context decode stays
+sub-quadratic (per-token cost O(n_app * S) attention reads, no S^2 term).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, transformer
+from repro.models.layers import (Ctx, NOCTX, apply_rope, attn_chunked,
+                                 attn_decode, attn_full, gated_mlp, rms_norm,
+                                 rope_tables, update_cache)
+from repro.models.mamba2 import block_defs as ssm_block_defs
+from repro.models.mamba2 import ssm_block
+from repro.models.params import ParamDef
+
+
+def n_applications(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_defs(cfg, tp: int = 1):
+    return {
+        **common.embed_defs(cfg),
+        "layers": common.stack_layer_defs(ssm_block_defs(cfg, tp),
+                                          cfg.n_layers),
+        "shared": transformer.block_defs(cfg, tp),   # ONE shared attn block
+    }
+
+
+def _shared_block(p, h, cfg, ctx, cos, sin, hmask, kc=None, vc=None,
+                  pos=None, want_cache=False):
+    """The shared attention+MLP block (transformer semantics)."""
+    x = rms_norm(h, p["ln1"])
+    q, k, v = transformer._qkv(p, x, cfg, cos, sin, ctx, hmask)
+    g = max(cfg.n_heads // cfg.n_kv_heads, 1)
+    if kc is not None:  # decode: read old cache + explicit self-token term
+        o = attn_decode(q, kc, vc, pos, k_new=k, v_new=v, ctx=ctx,
+                        group_size=g)
+    elif h.shape[1] <= 2048:
+        o = attn_full(q, k, v, group_size=g)
+    else:
+        o = attn_chunked(q, k, v, q_chunk=cfg.attn_chunk,
+                         kv_chunk=cfg.attn_chunk, group_size=g, ctx=ctx)
+    h = h + transformer._attn_out(p, o, ctx, hmask)
+    x = rms_norm(h, p["ln2"])
+    h = h + ctx.constrain(gated_mlp(p, x, ctx), "batch", "seq", None)
+    return h, (k, v)
+
+
+def _groups(cfg):
+    """Split layer indices into groups; the shared block runs after each
+    complete group of ``attn_every`` SSM layers."""
+    k = cfg.attn_every
+    n = cfg.n_layers
+    bounds = []
+    start = 0
+    while start < n:
+        end = min(start + k, n)
+        bounds.append((start, end, end - start == k))
+        start = end
+    return bounds
+
+
+def forward(params, batch, cfg, ctx: Ctx = NOCTX, return_cache: bool = False,
+            return_hidden: bool = False):
+    h = common.embed_tokens(params, batch["tokens"], cfg, ctx)
+    h = common.maybe_prepend_embeds(h, batch, ctx)
+    S = h.shape[1]
+    cos, sin = rope_tables(jnp.arange(S)[None, :], cfg.head_dim,
+                           cfg.rope_theta)
+    tp = ctx.axis_size("tensor")
+    hmask = common.head_mask(cfg, tp, h.dtype)
+    remat = (cfg.remat == "block") and not return_cache
+
+    def blk(carry, xs):
+        h, _ = carry
+        (p,) = xs
+        out, (conv, st) = ssm_block(p, h, cfg, ctx)
+        ys = (conv, st) if return_cache else None
+        return (ctx.constrain(h + out, "batch", "seq", None), None), ys
+
+    kvs = []
+    ssm_caches = []
+    for (g0, g1, complete) in _groups(cfg):
+        sub = jax.tree.map(lambda a: a[g0:g1], params["layers"])
+        h, _, ys = common.scan_blocks(blk, h, (sub,), remat=remat)
+        if return_cache:
+            ssm_caches.append(ys)
+        if complete:
+            h, kv = _shared_block(params["shared"], h, cfg, ctx, cos, sin,
+                                  hmask, want_cache=return_cache)
+            if return_cache:
+                kvs.append(kv)
+    if return_hidden:
+        return h
+    logits = common.unembed(params, h, cfg, ctx)
+    if not return_cache:
+        return logits
+    conv = jnp.concatenate([c for c, _ in ssm_caches], axis=0)
+    st = jnp.concatenate([s for _, s in ssm_caches], axis=0)
+    kc = jnp.stack([ctx.constrain(k, "batch", "kv_seq", None, None)
+                    for k, _ in kvs])
+    vc = jnp.stack([ctx.constrain(v, "batch", "kv_seq", None, None)
+                    for _, v in kvs])
+    return logits, {"conv": conv, "state": st, "k": kc, "v": vc,
+                    "pos": jnp.full((), S - 1, jnp.int32)}
+
+
+def cache_defs(cfg, B: int, S: int, tp: int = 1):
+    from repro.models.mamba2 import cache_defs as ssm_cache_defs
+    defs = ssm_cache_defs(cfg, B, S, tp)
+    napp = n_applications(cfg)
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+    defs["k"] = ParamDef((napp, B, S, Hkv, hd),
+                         (None, "batch", "kv_seq", None, None), init="zeros")
+    defs["v"] = ParamDef((napp, B, S, Hkv, hd),
+                         (None, "batch", "kv_seq", None, None), init="zeros")
+    return defs
+
+
+def decode_step(params, cache, tokens, cfg, ctx: Ctx = NOCTX):
+    h = common.embed_tokens(params, tokens, cfg, ctx)
+    pos = cache["pos"] + 1
+    B = tokens.shape[0]
+    cos, sin = rope_tables(jnp.full((B, 1), pos), cfg.head_dim,
+                           cfg.rope_theta)
+    tp = ctx.axis_size("tensor")
+    hmask = common.head_mask(cfg, tp, h.dtype)
+
+    def blk(carry, xs):
+        h, _ = carry
+        p, conv_c, st = xs
+        out, (conv_c, st2) = ssm_block(p, h, cfg, ctx,
+                                       conv_cache=conv_c, state=st)
+        return (h + out, None), (conv_c, st2.astype(st.dtype))
+
+    new_conv, new_state, new_k, new_v = [], [], [], []
+    app = 0
+    for (g0, g1, complete) in _groups(cfg):
+        sub = jax.tree.map(lambda a: a[g0:g1], params["layers"])
+        (h, _), (conv, st) = jax.lax.scan(
+            blk, (h, None),
+            (sub, cache["conv"][g0:g1], cache["state"][g0:g1]))
+        new_conv.append(conv)
+        new_state.append(st)
+        if complete:
+            h, (kc, vc) = _shared_block(
+                params["shared"], h, cfg, ctx, cos, sin, hmask,
+                kc=cache["k"][app], vc=cache["v"][app], pos=pos)
+            new_k.append(kc)
+            new_v.append(vc)
+            app += 1
+    logits = common.unembed(params, h, cfg, ctx)
+    kc = update_cache(cache["k"], jnp.stack(new_k), pos, ctx, seq_axis=2)
+    vc = update_cache(cache["v"], jnp.stack(new_v), pos, ctx, seq_axis=2)
+    return logits, {
+        "conv": jnp.concatenate(new_conv, 0),
+        "state": jnp.concatenate(new_state, 0),
+        "k": kc, "v": vc,
+        "pos": pos,
+    }

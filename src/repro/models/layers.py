@@ -1,0 +1,553 @@
+"""Shared building blocks for the assigned architectures.
+
+Everything is pure-functional JAX: params are pytrees (see models.params),
+activations get logical sharding constraints through ``Ctx`` (a mesh+rules
+handle; ``Ctx(None)`` makes every constraint a no-op so smoke tests run on
+one CPU device untouched).
+
+Attention comes in three schedules:
+* ``attn_full``     — materialized scores; smoke tests / short sequences.
+* ``attn_chunked``  — blockwise online-softmax (flash-style) over Q and KV
+                      blocks; used by train/prefill so a 32k x 32k score
+                      tensor never exists.
+* ``attn_decode``   — one new token vs a length-S cache; the cache length
+                      axis is sharded over the model axis at serving
+                      (flash-decoding: GSPMD turns the softmax reductions
+                      into psums over cache shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.launch import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    mesh: Optional[Mesh]
+    rules: Optional[Dict] = None
+
+    def constrain(self, x, *logical):
+        if self.mesh is None:
+            return x
+        return shd.constrain(x, self.mesh, self.rules, *logical)
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        ax = self.rules.get(logical)
+        if ax is None:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axes:
+            if a in self.mesh.shape:
+                n *= self.mesh.shape[a]
+        return n
+
+
+NOCTX = Ctx(None)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / mlp
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_tables(positions, dim: int, theta: float):
+    """positions (...,) -> cos/sin tables (..., dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., dim) with interleaved halves convention (x1 | x2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    while cos.ndim < x1.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def gated_mlp(params, x, ctx: "Ctx" = None):
+    """SwiGLU: silu(x W_g) * (x W_u) W_d.
+
+    The hidden (ff) axis is pinned to the tensor axis so GSPMD keeps the
+    megatron schedule (col-parallel up, row-parallel down, one psum) instead
+    of gathering weights (PERF: EXPERIMENTS.md Perf-1).
+    """
+    g = jnp.einsum("...d,df->...f", x, params["wg"])
+    u = jnp.einsum("...d,df->...f", x, params["wu"])
+    if ctx is not None:
+        g = ctx.constrain(g, *(("batch",) + (None,) * (g.ndim - 2)
+                               + ("tensor",)))
+        u = ctx.constrain(u, *(("batch",) + (None,) * (u.ndim - 2)
+                               + ("tensor",)))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["wd"])
+
+
+# ---------------------------------------------------------------------------
+# attention schedules (GQA)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k, n_q_heads: int, group_size: Optional[int] = None):
+    """Map each query head to its GQA kv head.
+
+    With TP head-padding the query head count may not be an exact multiple
+    of the kv head count; the mapping ``kv = min(h // group_size, Hkv-1)``
+    preserves the original model's groups exactly (padded heads are masked
+    out downstream anyway).
+    """
+    Hkv = k.shape[2]
+    if n_q_heads == Hkv:
+        return k
+    g = group_size or max(n_q_heads // Hkv, 1)
+    idx = jnp.minimum(jnp.arange(n_q_heads) // g, Hkv - 1)
+    return k[:, :, idx, :]
+
+
+def attn_full(q, k, v, *, causal: bool = True, q_offset=0,
+              group_size: Optional[int] = None):
+    """(B,Sq,H,dh) x (B,Sk,Hkv,dh) -> (B,Sq,H,dh), materialized scores."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H, group_size)
+    v = _expand_kv(v, H, group_size)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(Sk)[None, :]
+        scores = jnp.where((ki <= qi)[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def attn_chunked(q, k, v, *, q_chunk: int = 512, kv_chunk: int = 512,
+                 causal: bool = True, group_size: Optional[int] = None,
+                 ctx: "Ctx" = None):
+    """Blockwise online-softmax attention (no S x S tensor).
+
+    The (expanded) KV blocks and the q blocks are pinned head-sharded over
+    the tensor axis BEFORE the block scans; otherwise GSPMD reshards a KV
+    block on every inner step — an all-to-all inside a doubly-nested loop
+    dominated the whole prefill roofline (PERF: EXPERIMENTS.md Perf-1).
+    """
+    B, S, H, dh = q.shape
+    dv = v.shape[-1]  # MLA: v head dim differs from q/k head dim
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    assert S % qc == 0 and S % kc == 0, (S, qc, kc)
+    nq, nk = S // qc, S // kc
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    kr = _expand_kv(k, H, group_size).reshape(B, nk, kc, H, dh)
+    vr = _expand_kv(v, H, group_size).reshape(B, nk, kc, H, dv)
+    qs = q.reshape(B, nq, qc, H, dh)
+    if ctx is not None:
+        kr = ctx.constrain(kr, "batch", None, None, "tensor", None)
+        vr = ctx.constrain(vr, "batch", None, None, "tensor", None)
+        qs = ctx.constrain(qs, "batch", None, None, "tensor", None)
+
+    def q_block(qi, qb, nk_eff: int):
+        # online softmax over kv blocks
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kb = kr[:, j]  # (B, kc, H, dh)
+            vb = vr[:, j]
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            s = s * scale
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)[:, None]
+                kpos = j * kc + jnp.arange(kc)[None, :]
+                s = jnp.where((kpos <= qpos)[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk_eff))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)  # (B, qc, H, dv)
+
+    if not causal:
+        outs = jax.lax.map(lambda i: q_block(i, qs[:, i], nk),
+                           jnp.arange(nq))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(
+            B, S, H, dv).astype(q.dtype)
+
+    # causal triangular scheduling (PERF: EXPERIMENTS.md Perf-2): a single
+    # full-length inner scan spends 2x the needed FLOPs on fully-masked
+    # j > i blocks.  Bucket q blocks by prefix length; bucket b only scans
+    # its own prefix — total block pairs drop from nq^2 toward nq^2/2.
+    nb = min(8, nq)
+    parts = []
+    for b in range(nb):
+        i0, i1 = b * nq // nb, (b + 1) * nq // nb
+        if i0 == i1:
+            continue
+        nk_eff = max(1, (i1 * qc + kc - 1) // kc)  # prefix covering block i1-1
+        sub = jax.lax.map(lambda i: q_block(i, qs[:, i], nk_eff),
+                          jnp.arange(i0, i1))
+        parts.append(sub)
+    outs = jnp.concatenate(parts, axis=0)
+    # (nq, B, qc, H, dv) -> (B, S, H, dv)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv).astype(q.dtype)
+
+
+def update_cache(cache, new, pos, ctx: Ctx = NOCTX, seq_axis: int = 1):
+    """Write one decode step into a cache whose length axis may be sharded
+    over the model axis.
+
+    A plain dynamic_update_slice at a runtime offset on a sharded axis makes
+    GSPMD materialize the *full* cache (all-gather, update, re-shard — tens
+    of GiB for a 72B/32k cell).  Instead we shard_map the update: only the
+    shard owning position ``pos`` touches memory, and only an O(new)-sized
+    slice is ever temporary.  Call this ONCE per step on the layer-stacked
+    cache (decode attention reads the *old* cache plus an explicit
+    self-token term), so the donated input aliases the output and the scan
+    never copies cache shards.
+
+    cache: (..., S at seq_axis, ...); new: same with length 1; pos: int32.
+    """
+    zeros = (0,) * cache.ndim
+
+    def plain():
+        start = zeros[:seq_axis] + (pos,) + zeros[seq_axis + 1:]
+        return jax.lax.dynamic_update_slice(
+            cache, new.astype(cache.dtype), start)
+
+    if ctx.mesh is None or "model" not in getattr(ctx.mesh, "shape", {}):
+        return plain()
+    kv_ax = ctx.rules.get("kv_seq") if ctx.rules else None
+    if kv_ax is None:
+        return plain()
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import _drop_missing, _fit_axes
+    mesh = ctx.mesh
+    # batch axis is whichever non-seq axis carries the batch sharding; we
+    # conservatively shard only the seq axis here and let GSPMD reshard --
+    # but keeping the batch sharding explicit avoids any data motion:
+    specs = [None] * cache.ndim
+    specs[seq_axis] = "model"
+    # find a batch-sized axis to keep sharded (axis 0 for (B,S,..),
+    # axis 1 for stacked (L,B,S,..))
+    b_axis = 0 if seq_axis == 1 else 1
+    batch_ax = _fit_axes(cache.shape[b_axis], _drop_missing(
+        ctx.rules["batch"], mesh), mesh)
+    specs[b_axis] = batch_ax
+    cspec = P(*specs)
+    nspecs = list(specs)
+    nspecs[seq_axis] = None
+    nspec = P(*nspecs)
+
+    def upd(c_local, n_local, p):
+        i = jax.lax.axis_index("model")
+        local_s = c_local.shape[seq_axis]
+        off = p - i * local_s
+        inb = (off >= 0) & (off < local_s)
+        off_c = jnp.clip(off, 0, local_s - 1)
+        start = zeros[:seq_axis] + (off_c,) + zeros[seq_axis + 1:]
+        cur = jax.lax.dynamic_slice(c_local, start, n_local.shape)
+        val = jnp.where(inb, n_local.astype(c_local.dtype), cur)
+        return jax.lax.dynamic_update_slice(c_local, val, start)
+
+    return shard_map(upd, mesh=mesh, in_specs=(cspec, nspec, P()),
+                     out_specs=cspec, check_rep=False)(
+        cache, new, jnp.asarray(pos, jnp.int32))
+
+
+def attn_decode(q, k_cache, v_cache, pos, k_new=None, v_new=None,
+                ctx: Ctx = NOCTX, group_size: Optional[int] = None):
+    """One-step attention: q (B,1,H,dh) vs the OLD cache (B,S,Hkv,dh) plus
+    the new token's own k/v (B,1,Hkv,dh) as an explicit extra term.
+
+    Cache entries at positions >= pos (the new token's position) are
+    masked.  Reading the old cache (instead of the freshly-updated one)
+    removes the data dependence between attention and the cache write, so
+    the write happens once per step on the layer-stacked cache with full
+    input/output aliasing — no per-layer cache copies in the scan.
+    """
+    B, _, H, dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    if group_size and H == Hkv * group_size:
+        # grouped form: never materialize the expanded KV — each GQA group
+        # contracts directly against its kv head, so the cache is read once
+        # (decode is memory-bound; an 8x expansion would be 8x HBM traffic)
+        g = group_size
+        qg = q.reshape(B, 1, Hkv, g, dh)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache)
+        s = s.astype(jnp.float32) * scale
+        s = ctx.constrain(s, "batch", None, None, None, "kv_seq")
+        mask = (jnp.arange(S)[None, None, None, None, :] < pos)
+        s = jnp.where(mask, s, -1e30)
+        if k_new is not None:
+            s_self = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_new)
+            s_self = s_self.astype(jnp.float32) * scale
+            # no concat: concatenating the (.,.,.,1,S) and (.,.,.,1,1)
+            # score blocks forces GSPMD to reshard the big block
+            m = jnp.maximum(s.max(-1, keepdims=True),
+                            s_self.max(-1, keepdims=True))
+            p_c = jnp.exp(s - m)
+            p_s = jnp.exp(s_self - m)
+            denom = p_c.sum(-1, keepdims=True) + p_s.sum(-1, keepdims=True)
+            out = jnp.einsum("bkgqs,bskd->bqkgd",
+                             (p_c / denom).astype(v_cache.dtype), v_cache)
+            out = out + jnp.einsum(
+                "bkgqs,bskd->bqkgd", (p_s / denom).astype(v_new.dtype), v_new)
+            return out.reshape(B, 1, H, dh)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v_cache.dtype),
+                         v_cache)
+        return out.reshape(B, 1, H, dh)
+    k = _expand_kv(k_cache, H, group_size)
+    v = _expand_kv(v_cache, H, group_size)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * scale
+    scores = ctx.constrain(scores, "batch", None, None, "kv_seq")
+    mask = (jnp.arange(S)[None, None, None, :] < pos)
+    scores = jnp.where(mask, scores, -1e30)
+    if k_new is not None:
+        kn = _expand_kv(k_new, H, group_size)
+        vn = _expand_kv(v_new, H, group_size)
+        s_self = jnp.einsum("bqhd,bkhd->bhqk", q, kn).astype(jnp.float32)
+        s_self = s_self * scale
+        m = jnp.maximum(scores.max(-1, keepdims=True),
+                        s_self.max(-1, keepdims=True))
+        p_c = jnp.exp(scores - m)
+        p_s = jnp.exp(s_self - m)
+        denom = p_c.sum(-1, keepdims=True) + p_s.sum(-1, keepdims=True)
+        out = jnp.einsum("bhqk,bkhd->bqhd", (p_c / denom).astype(v.dtype), v)
+        out = out + jnp.einsum("bhqk,bkhd->bqhd",
+                               (p_s / denom).astype(vn.dtype), vn)
+        return out
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MoE block (token-choice top-k, capacity dispatch, EP over the model axis)
+# ---------------------------------------------------------------------------
+
+def moe_router(x, wr, top_k: int):
+    """x (T,d), wr (d,E) -> (gates (T,k), idx (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x, wr).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style)
+    E = wr.shape[1]
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / idx.size)
+    aux = E * jnp.sum(me * ce)
+    return gates.astype(x.dtype), idx, aux
+
+
+def moe_expert_compute(x_flat, gates, idx, w_gate, w_up, w_down, *,
+                       n_experts: int, expert_offset, capacity: int):
+    """Capacity-based dispatch for the local expert slice.
+
+    x_flat (T,d); idx (T,k) global expert ids; w_* (E_loc, ...) local
+    experts.  Returns (T,d) partial output (sum over *local* experts only —
+    caller psums over the expert-parallel axis).
+    """
+    T, d = x_flat.shape
+    E_loc = w_gate.shape[0]
+    k = idx.shape[1]
+    flat_e = idx.reshape(-1) - expert_offset              # (T*k,)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    mine = (flat_e >= 0) & (flat_e < E_loc)
+    e_safe = jnp.where(mine, flat_e, 0)
+    onehot = jax.nn.one_hot(e_safe, E_loc, dtype=jnp.int32) * mine[:, None]
+    ranks = jnp.cumsum(onehot, axis=0) - 1                # (T*k, E_loc)
+    rank = jnp.sum(ranks * onehot, axis=1)                # rank within expert
+    keep = mine & (rank < capacity)
+    # dispatch buffers (E_loc, capacity): token index + gate (0 where empty)
+    slot_e = jnp.where(keep, e_safe, 0)
+    slot_r = jnp.where(keep, rank, capacity)              # dump row
+    buf_t = jnp.zeros((E_loc, capacity + 1), jnp.int32).at[
+        slot_e, slot_r].set(jnp.where(keep, flat_t + 1, 0))[:, :capacity]
+    buf_g = jnp.zeros((E_loc, capacity + 1), flat_g.dtype).at[
+        slot_e, slot_r].set(jnp.where(keep, flat_g, 0.0))[:, :capacity]
+    occupied = buf_t > 0
+    xg = x_flat[jnp.maximum(buf_t - 1, 0)]                # (E_loc, C, d)
+    xg = xg * occupied[..., None].astype(xg.dtype)
+    g = jnp.einsum("ecd,edf->ecf", xg, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xg, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    y = y * buf_g[..., None].astype(y.dtype)
+    out = jnp.zeros((T + 1, d), y.dtype).at[buf_t.reshape(-1)].add(
+        y.reshape(-1, d))[1:]
+    return out
+
+
+def moe_block(params, x, cfg, ctx: Ctx = NOCTX):
+    """Full MoE layer: shared experts (dense) + routed experts (EP).
+
+    x (B, S, d).  Routed experts are sharded over the "experts" logical axis
+    (the model mesh axis); with a mesh this runs under shard_map so dispatch
+    is local per shard and a single psum combines expert partials.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    def local(x_l, wr, wg, wu, wd, idx_shift):
+        T = x_l.shape[0] * x_l.shape[1]
+        xf = x_l.reshape(T, d)
+        gates, idx, aux = moe_router(xf, wr, k)
+        cap = max(8, int(T * k * cfg.capacity_factor) // E)
+        out = moe_expert_compute(
+            xf, gates, idx, wg, wu, wd,
+            n_experts=E, expert_offset=idx_shift, capacity=cap)
+        return out.reshape(x_l.shape), aux
+
+    if ctx.mesh is not None and "model" in ctx.mesh.shape:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.sharding import _drop_missing, _fit_axes
+        mesh = ctx.mesh
+        batch_ax = _fit_axes(x.shape[0], _drop_missing(
+            ctx.rules["batch"], mesh), mesh)
+        xspec = P(batch_ax, None, None)
+        espec = P("model", None, None)
+
+        def mapped(x_l, wr, wg, wu, wd):
+            eloc = wg.shape[0]
+            shift = jax.lax.axis_index("model") * eloc
+            out, aux = local(x_l, wr, wg, wu, wd, shift)
+            out = jax.lax.psum(out, "model")
+            aux = jax.lax.pmean(aux, "model")
+            return out, aux
+
+        out, aux = shard_map(
+            mapped, mesh=mesh,
+            in_specs=(xspec, P(None, None), espec, espec, espec),
+            out_specs=(xspec, P()),
+            check_rep=False,
+        )(x, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+    else:
+        out, aux = local(x, params["router"], params["w_gate"],
+                         params["w_up"], params["w_down"], 0)
+    if cfg.n_shared_experts:
+        out = out + gated_mlp(params["shared"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — chunked scan + single-step recurrence
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int):
+    """Chunked state-space-duality scan (Mamba2).
+
+    x (B,S,H,P), dt (B,S,H) (post-softplus), A (H,) (negative),
+    Bm/Cm (B,S,G,N), D (H,).  Returns y (B,S,H,P) and final state
+    (B,H,P,N).
+    """
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    xs = x.reshape(Bsz, nc, c, H, Pd)
+    dts = dt.reshape(Bsz, nc, c, H)
+    Bs = jnp.repeat(Bm.reshape(Bsz, nc, c, G, N), rep, axis=3)
+    Cs = jnp.repeat(Cm.reshape(Bsz, nc, c, G, N), rep, axis=3)
+
+    dA = dts * A[None, None, :]                      # (B,k,c,H) negative
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+    seg_end = cum[:, :, -1, :]                       # total chunk decay
+
+    # intra-chunk (quadratic in c): y_intra[t] = sum_{s<=t} C_t.B_s decay x_s
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)  # (B,k,c,s,H)
+    cb = jnp.einsum("bkchn,bkshn->bkhcs", Cs, Bs).astype(jnp.float32)
+    att = cb * decay.transpose(0, 1, 4, 2, 3)             # (B,k,H,c,s)
+    xdt = (xs * dts[..., None]).astype(jnp.float32)       # (B,k,c,H,P)
+    y_intra = jnp.einsum("bkhcs,bkshp->bkchp", att, xdt)
+
+    # contribution of each chunk to its own end-state
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cum)  # (B,k,c,H)
+    state_in = jnp.einsum("bkchn,bkchp->bkhpn", Bs,
+                          xdt * decay_to_end[..., None])
+
+    # inter-chunk recurrence over chunks
+    def step(h, inp):
+        st_in, dec = inp
+        h_new = h * jnp.exp(dec)[:, :, None, None] + st_in
+        return h_new, h
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        step, h0,
+        (state_in.transpose(1, 0, 2, 3, 4), seg_end.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # (B,k,H,P,N)
+
+    # inter-chunk output: C_t . (decay from chunk start) . h_prev
+    dec_from_start = jnp.exp(cum)                         # (B,k,c,H)
+    y_inter = jnp.einsum("bkchn,bkhpn->bkchp", Cs,
+                         h_prev.astype(jnp.float32)) \
+        * dec_from_start[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def ssd_step(x, dt, A, Bm, Cm, D, h):
+    """Single decode step: x (B,H,P), dt (B,H), Bm/Cm (B,G,N), h (B,H,P,N)."""
+    G = Bm.shape[1]
+    rep = x.shape[1] // G
+    Bs = jnp.repeat(Bm, rep, axis=1)                     # (B,H,N)
+    Cs = jnp.repeat(Cm, rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])[..., None, None]       # (B,H,1,1)
+    upd = jnp.einsum("bhn,bhp->bhpn", Bs, (x * dt[..., None]))
+    h_new = h * dA + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cs, h_new.astype(Cs.dtype))
+    y = y + x * D[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv: x (B,S,C), w (K,C).  With a cache (B,K-1,C),
+    performs the streaming update and returns (y, new_cache)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([cache, x], axis=1)
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_cache = pad[:, -(K - 1):, :] if K > 1 else pad[:, :0, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_cache

@@ -1,0 +1,156 @@
+"""Mamba2 (state-space duality) decoder — attention-free.
+
+Each block: in_proj -> (z | x | B | C | dt), causal depthwise conv over
+(x|B|C), softplus dt, chunked SSD scan (layers.ssd_chunked), gated RMSNorm,
+out_proj.  Decode keeps O(1) state per layer: the SSM state (B,H,P,N) plus
+the (K-1)-step conv window — this is what makes the 500k-context decode cell
+trivially sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.layers import (Ctx, NOCTX, causal_conv1d, rms_norm,
+                                 ssd_chunked, ssd_step)
+from repro.models.params import ParamDef
+
+
+def block_defs(cfg, tp: int = 1):
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    return {
+        "ln": ParamDef((d,), (None,), init="ones"),
+        "w_in": ParamDef((d, 2 * di + 2 * G * N + H), ("embed", "tensor"),
+                         fan_in=d),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), (None, "tensor")),
+        "A_log": ParamDef((H,), ("tensor",), init="zeros"),
+        "D": ParamDef((H,), ("tensor",), init="ones"),
+        "dt_bias": ParamDef((H,), ("tensor",), init="zeros"),
+        "out_norm": ParamDef((di,), ("tensor",), init="ones"),
+        "w_out": ParamDef((di, d), ("tensor", "embed"), fan_in=di),
+    }
+
+
+def param_defs(cfg, tp: int = 1):
+    return {
+        **common.embed_defs(cfg),
+        "layers": common.stack_layer_defs(block_defs(cfg, tp), cfg.n_layers),
+    }
+
+
+def _split_proj(proj, cfg):
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    Bm = proj[..., 2 * di:2 * di + G * N]
+    Cm = proj[..., 2 * di + G * N:2 * di + 2 * G * N]
+    dt = proj[..., 2 * di + 2 * G * N:]
+    return z, x, Bm, Cm, dt
+
+
+def ssm_block(p, h, cfg, ctx: Ctx, conv_cache=None, state=None):
+    """Returns (out, (new_conv_cache, new_state)); caches None for train."""
+    Bsz, S, _ = h.shape
+    di = cfg.d_inner
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xn = rms_norm(h, p["ln"])
+    proj = jnp.einsum("bsd,dk->bsk", xn, p["w_in"])
+    proj = ctx.constrain(proj, "batch", "seq", "tensor")
+    z, x, Bm, Cm, dtr = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_out, new_conv = causal_conv1d(conv_in, p["conv_w"], conv_cache)
+    x, Bm, Cm = (conv_out[..., :di],
+                 conv_out[..., di:di + G * N],
+                 conv_out[..., di + G * N:])
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(Bsz, S, H, P)
+    Bh = Bm.reshape(Bsz, S, G, N)
+    Ch = Cm.reshape(Bsz, S, G, N)
+    if state is None:
+        # pad S to a chunk multiple; padded steps have dt = 0 (identity
+        # decay, zero input) so the state is unaffected
+        c = min(cfg.ssm_chunk, S)
+        pad = (-S) % c
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, new_state = ssd_chunked(xh, dt, A, Bh, Ch,
+                                   p["D"].astype(jnp.float32), chunk=c)
+        if pad:
+            y = y[:, :S]
+    else:
+        y, new_state = ssd_step(xh[:, 0], dt[:, 0], A, Bh[:, 0], Ch[:, 0],
+                                p["D"].astype(jnp.float32), state)
+        y = y[:, None]
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["out_norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return ctx.constrain(out, "batch", "seq", None), (new_conv, new_state)
+
+
+def forward(params, batch, cfg, ctx: Ctx = NOCTX, return_cache: bool = False,
+            return_hidden: bool = False):
+    h = common.embed_tokens(params, batch["tokens"], cfg, ctx)
+    h = common.maybe_prepend_embeds(h, batch, ctx)
+
+    def blk(carry, xs):
+        h, _ = carry
+        (p,) = xs
+        out, (conv, st) = ssm_block(p, h, cfg, ctx)
+        h = ctx.constrain(h + out, "batch", "seq", None)
+        ys = (conv, st) if return_cache else None
+        return (h, None), ys
+
+    h, _, ys = common.scan_blocks(
+        blk, h, (params["layers"],),
+        remat=(cfg.remat == "block") and not return_cache)
+    if return_hidden:
+        return h
+    logits = common.unembed(params, h, cfg, ctx)
+    if not return_cache:
+        return logits
+    conv, st = ys
+    return logits, {"conv": conv, "state": st,
+                    "pos": jnp.full((), h.shape[1] - 1, jnp.int32)}
+
+
+def cache_defs(cfg, B: int, S: int, tp: int = 1):
+    """Decode cache is O(1) in S: conv window + SSM state per layer."""
+    L = cfg.n_layers
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * G * N
+    return {
+        "conv": ParamDef((L, B, cfg.ssm_conv - 1, conv_ch),
+                         ("layers", "batch", None, "tensor"), init="zeros"),
+        "state": ParamDef((L, B, H, P, N),
+                          ("layers", "batch", "tensor", None, None),
+                          init="zeros"),
+        "pos": ParamDef((), (), init="zeros"),
+    }
+
+
+def decode_step(params, cache, tokens, cfg, ctx: Ctx = NOCTX):
+    h = common.embed_tokens(params, tokens, cfg, ctx)
+    pos = cache["pos"] + 1
+
+    def blk(carry, xs):
+        h, _ = carry
+        p, conv_c, st = xs
+        out, (conv_c, st) = ssm_block(p, h, cfg, ctx,
+                                      conv_cache=conv_c, state=st)
+        return (h + out, None), (conv_c, st.astype(xs[2].dtype))
+
+    (h, _), (conv, st) = jax.lax.scan(
+        blk, (h, None), (params["layers"], cache["conv"], cache["state"]))
+    logits = common.unembed(params, h, cfg, ctx)
+    return logits, {"conv": conv, "state": st, "pos": pos}

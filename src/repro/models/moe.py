@@ -1,0 +1,316 @@
+"""MoE decoder with Multi-head Latent Attention (DeepSeek-V2 / Kimi-K2).
+
+MLA: queries optionally low-rank (q_lora); keys/values decompressed from a
+shared compressed latent c_kv (kv_lora) plus a single shared RoPE key head.
+The decode cache stores only (c_kv, k_rope) — the architecture's point —
+and decoding uses the *absorbed* formulation (scores computed in latent
+space, W_uk/W_uv folded into the query/output transforms).
+
+MoE: token-choice top-k routing with capacity dispatch; routed experts are
+expert-parallel over the model mesh axis (see layers.moe_block); shared
+experts and the first ``first_dense_layers`` dense blocks run as plain TP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.layers import (Ctx, NOCTX, apply_rope, attn_chunked,
+                                 attn_full, gated_mlp, moe_block, rms_norm,
+                                 rope_tables, update_cache)
+from repro.models.params import ParamDef
+
+
+def mla_defs(cfg, tp: int = 1):
+    d = cfg.d_model
+    H = cfg.heads_padded(tp)
+    qh = cfg.nope_head_dim + cfg.rope_head_dim
+    defs = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "wo": ParamDef((H, cfg.v_head_dim, d), ("tensor", None, "embed"),
+                       fan_in=H * cfg.v_head_dim),
+        "wdkv": ParamDef((d, cfg.kv_lora), ("embed", None), fan_in=d),
+        "kv_norm": ParamDef((cfg.kv_lora,), (None,), init="ones"),
+        "wkr": ParamDef((d, cfg.rope_head_dim), ("embed", None), fan_in=d),
+        "wuk": ParamDef((cfg.kv_lora, H, cfg.nope_head_dim),
+                        (None, "tensor", None), fan_in=cfg.kv_lora),
+        "wuv": ParamDef((cfg.kv_lora, H, cfg.v_head_dim),
+                        (None, "tensor", None), fan_in=cfg.kv_lora),
+    }
+    if cfg.q_lora:
+        defs.update({
+            "wdq": ParamDef((d, cfg.q_lora), ("embed", None), fan_in=d),
+            "q_norm": ParamDef((cfg.q_lora,), (None,), init="ones"),
+            "wuq": ParamDef((cfg.q_lora, H, qh), (None, "tensor", None),
+                            fan_in=cfg.q_lora),
+        })
+    else:
+        defs["wq"] = ParamDef((d, H, qh), ("embed", "tensor", None), fan_in=d)
+    return defs
+
+
+def dense_mlp_defs(cfg):
+    d = cfg.d_model
+    return {
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "wg": ParamDef((d, cfg.d_ff), ("embed", "tensor"), fan_in=d),
+        "wu": ParamDef((d, cfg.d_ff), ("embed", "tensor"), fan_in=d),
+        "wd": ParamDef((cfg.d_ff, d), ("tensor", "embed"), fan_in=cfg.d_ff),
+    }
+
+
+def moe_mlp_defs(cfg):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    fs = f * cfg.n_shared_experts
+    defs = {
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "router": ParamDef((d, E), (None, None), fan_in=d),
+        "w_gate": ParamDef((E, d, f), ("experts", "embed", None), fan_in=d),
+        "w_up": ParamDef((E, d, f), ("experts", "embed", None), fan_in=d),
+        "w_down": ParamDef((E, f, d), ("experts", None, "embed"), fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = {
+            "wg": ParamDef((d, fs), ("embed", "tensor"), fan_in=d),
+            "wu": ParamDef((d, fs), ("embed", "tensor"), fan_in=d),
+            "wd": ParamDef((fs, d), ("tensor", "embed"), fan_in=fs),
+        }
+    return defs
+
+
+def param_defs(cfg, tp: int = 1):
+    nd = cfg.first_dense_layers
+    defs = {
+        **common.embed_defs(cfg),
+        "moe_layers": common.stack_layer_defs(
+            {**mla_defs(cfg, tp), **moe_mlp_defs(cfg)}, cfg.n_layers - nd),
+    }
+    if nd > 0:
+        defs["dense_layers"] = common.stack_layer_defs(
+            {**mla_defs(cfg, tp), **dense_mlp_defs(cfg)}, nd)
+    return defs
+
+
+def _mla_qkv(p, x, cfg, cos, sin, ctx: Ctx, hmask):
+    """Full (decompressed) MLA q/k/v for train/prefill."""
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"])
+    k_rope = apply_rope(jnp.einsum("bsd,dk->bsk", x, p["wkr"])[:, :, None, :],
+                        cos, sin)                      # (B,S,1,rope_d)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"])
+    v = jnp.einsum("bsr,rhv->bshv", ckv, p["wuv"])
+    H = q.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (rope_d,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if hmask is not None:
+        q = q * hmask[None, None, :, None]
+    q = ctx.constrain(q, "batch", "seq", "tensor", None)
+    return q, k, v, ckv, k_rope[:, :, 0, :]
+
+
+def _attn_out(p, o, ctx: Ctx, hmask):
+    if hmask is not None:
+        o = o * hmask[None, None, :, None]
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return ctx.constrain(out, "batch", "seq", None)
+
+
+def _mla_block(p, h, cfg, cos, sin, ctx, hmask, use_full, want_cache):
+    x = rms_norm(h, p["ln1"])
+    q, k, v, ckv, krope = _mla_qkv(p, x, cfg, cos, sin, ctx, hmask)
+    if use_full:
+        o = attn_full(q, k, v)
+    else:
+        o = attn_chunked(q, k, v, q_chunk=cfg.attn_chunk,
+                         kv_chunk=cfg.attn_chunk, ctx=ctx)
+    h = h + _attn_out(p, o, ctx, hmask)
+    cache = None
+    if want_cache:
+        cache = (ctx.constrain(ckv, "batch", "kv_seq", None),
+                 ctx.constrain(krope, "batch", "kv_seq", None))
+    return h, cache
+
+
+def forward(params, batch, cfg, ctx: Ctx = NOCTX, return_cache: bool = False,
+            return_hidden: bool = False):
+    tokens = batch["tokens"]
+    h = common.embed_tokens(params, tokens, cfg, ctx)
+    h = common.maybe_prepend_embeds(h, batch, ctx)
+    S = h.shape[1]
+    cos, sin = rope_tables(jnp.arange(S)[None, :], cfg.rope_head_dim,
+                           cfg.rope_theta)
+    tp = ctx.axis_size("tensor")
+    hmask = common.head_mask(cfg, tp, h.dtype)
+    use_full = S <= 2048
+    nd = cfg.first_dense_layers
+    caches = {"dense": None, "moe": None}
+
+    def dense_blk(carry, xs):
+        h, aux = carry
+        (p,) = xs
+        h, cache = _mla_block(p, h, cfg, cos, sin, ctx, hmask, use_full,
+                              return_cache)
+        x = rms_norm(h, p["ln2"])
+        h = h + ctx.constrain(gated_mlp(p, x, ctx), "batch", "seq", None)
+        return (h, aux), cache
+
+    def moe_blk(carry, xs):
+        h, aux = carry
+        (p,) = xs
+        h, cache = _mla_block(p, h, cfg, cos, sin, ctx, hmask, use_full,
+                              return_cache)
+        x = rms_norm(h, p["ln2"])
+        mo, a = moe_block(p, x, cfg, ctx)
+        h = h + ctx.constrain(mo, "batch", "seq", None)
+        return (h, aux + a), cache
+
+    remat = (cfg.remat == "block") and not return_cache
+    aux = jnp.zeros((), jnp.float32)
+    if nd > 0:
+        h, aux, caches["dense"] = common.scan_blocks(
+            dense_blk, h, (params["dense_layers"],), remat=remat,
+            carry_extra=aux)
+    h, aux, caches["moe"] = common.scan_blocks(
+        moe_blk, h, (params["moe_layers"],), remat=remat, carry_extra=aux)
+    if return_hidden:
+        return h
+    logits = common.unembed(params, h, cfg, ctx)
+    if not return_cache:
+        return logits, aux
+    cache = {
+        "dense_ckv": caches["dense"][0] if nd else None,
+        "dense_kr": caches["dense"][1] if nd else None,
+        "moe_ckv": caches["moe"][0],
+        "moe_kr": caches["moe"][1],
+        "pos": jnp.full((), S - 1, jnp.int32),
+    }
+    return logits, aux, cache
+
+
+def cache_defs(cfg, B: int, S: int, tp: int = 1):
+    nd, L = cfg.first_dense_layers, cfg.n_layers
+    r, kr = cfg.kv_lora, cfg.rope_head_dim
+    def c(n, dim):
+        return ParamDef((n, B, S, dim), ("layers", "batch", "kv_seq", None),
+                        init="zeros")
+    defs = {
+        "moe_ckv": c(L - nd, r), "moe_kr": c(L - nd, kr),
+        "pos": ParamDef((), (), init="zeros"),
+    }
+    defs["dense_ckv"] = c(nd, r) if nd else None
+    defs["dense_kr"] = c(nd, kr) if nd else None
+    return defs
+
+
+def _mla_decode_attn(p, x, ckv_c, kr_c, pos, cfg, ctx: Ctx, hmask, cos, sin):
+    """Absorbed-MLA decode: scores and context in latent space.
+
+    Reads the OLD latent cache plus an explicit self-token term; returns the
+    new token's latents for the post-scan stacked cache write.
+    """
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    if hmask is not None:
+        q_nope = q_nope * hmask[None, None, :, None]
+        q_rope = q_rope * hmask[None, None, :, None]
+
+    # new token's latent kv
+    ckv_new = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"])
+    kr_new = apply_rope(jnp.einsum("bsd,dk->bsk", x, p["wkr"])[:, :, None, :],
+                        cos, sin)[:, :, 0, :]
+
+    # absorbed scores: q_nope -> latent space once per step
+    scale = 1.0 / jnp.sqrt(jnp.float32(nope + rope_d))
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+    s = jnp.einsum("bshr,btr->bhst", q_lat, ckv_c) \
+        + jnp.einsum("bshk,btk->bhst", q_rope, kr_c)
+    s = s.astype(jnp.float32) * scale
+    s = ctx.constrain(s, "batch", None, None, "kv_seq")
+    S = ckv_c.shape[1]
+    mask = jnp.arange(S)[None, None, None, :] < pos
+    s = jnp.where(mask, s, -1e30)
+    s_self = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_new)
+              + jnp.einsum("bshk,btk->bhst", q_rope, kr_new)
+              ).astype(jnp.float32) * scale
+    m = jnp.maximum(s.max(-1, keepdims=True), s_self.max(-1, keepdims=True))
+    p_c = jnp.exp(s - m)
+    p_s = jnp.exp(s_self - m)
+    denom = p_c.sum(-1, keepdims=True) + p_s.sum(-1, keepdims=True)
+    ctx_lat = jnp.einsum("bhst,btr->bshr",
+                         (p_c / denom).astype(ckv_c.dtype), ckv_c)
+    ctx_lat = ctx_lat + jnp.einsum(
+        "bhst,btr->bshr", (p_s / denom).astype(ckv_new.dtype), ckv_new)
+    o = jnp.einsum("bshr,rhv->bshv", ctx_lat, p["wuv"])
+    return o, ckv_new, kr_new
+
+
+def decode_step(params, cache, tokens, cfg, ctx: Ctx = NOCTX):
+    B = tokens.shape[0]
+    h = common.embed_tokens(params, tokens, cfg, ctx)
+    pos = cache["pos"] + 1
+    cos, sin = rope_tables(jnp.full((B, 1), pos), cfg.rope_head_dim,
+                           cfg.rope_theta)
+    tp = ctx.axis_size("tensor")
+    hmask = common.head_mask(cfg, tp, h.dtype)
+    nd = cfg.first_dense_layers
+
+    def dense_blk(carry, xs):
+        h, _ = carry
+        p, ckv_c, kr_c = xs
+        x = rms_norm(h, p["ln1"])
+        o, ckv_new, kr_new = _mla_decode_attn(p, x, ckv_c, kr_c, pos, cfg,
+                                              ctx, hmask, cos, sin)
+        h = h + _attn_out(p, o, ctx, hmask)
+        x = rms_norm(h, p["ln2"])
+        h = h + gated_mlp(p, x)
+        return (h, None), (ckv_new, kr_new)
+
+    def moe_blk(carry, xs):
+        h, _ = carry
+        p, ckv_c, kr_c = xs
+        x = rms_norm(h, p["ln1"])
+        o, ckv_new, kr_new = _mla_decode_attn(p, x, ckv_c, kr_c, pos, cfg,
+                                              ctx, hmask, cos, sin)
+        h = h + _attn_out(p, o, ctx, hmask)
+        x = rms_norm(h, p["ln2"])
+        mo, _ = moe_block(p, x, cfg, ctx)
+        h = h + mo
+        return (h, None), (ckv_new, kr_new)
+
+    new_cache = dict(cache)
+    if nd:
+        (h, _), (dc, dk) = jax.lax.scan(
+            dense_blk, (h, None),
+            (params["dense_layers"], cache["dense_ckv"], cache["dense_kr"]))
+        new_cache["dense_ckv"] = update_cache(cache["dense_ckv"], dc, pos,
+                                              ctx, seq_axis=2)
+        new_cache["dense_kr"] = update_cache(cache["dense_kr"], dk, pos,
+                                             ctx, seq_axis=2)
+    (h, _), (mc, mk) = jax.lax.scan(
+        moe_blk, (h, None),
+        (params["moe_layers"], cache["moe_ckv"], cache["moe_kr"]))
+    new_cache["moe_ckv"] = update_cache(cache["moe_ckv"], mc, pos, ctx,
+                                        seq_axis=2)
+    new_cache["moe_kr"] = update_cache(cache["moe_kr"], mk, pos, ctx,
+                                       seq_axis=2)
+    new_cache["pos"] = pos
+    logits = common.unembed(params, h, cfg, ctx)
+    return logits, new_cache

@@ -1,0 +1,63 @@
+"""Parameter definition/initialization with logical sharding axes.
+
+Models declare parameters once as :class:`ParamDef` pytrees; from that single
+source of truth we derive
+
+* ``init_params``      — materialized arrays (smoke tests, real training),
+* ``abstract_params``  — ShapeDtypeStructs (dry-run lowering, no allocation),
+* ``launch.sharding.tree_specs`` — PartitionSpecs for pjit in/out shardings.
+
+Layer-stacked parameters (scan-over-layers) carry a leading "layers" axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones | scaled
+    fan_in: Optional[int] = None      # for scaled init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan = d.fan_in if d.fan_in else (d.shape[-2] if len(d.shape) >= 2
+                                             else d.shape[-1])
+            scale = 1.0 / math.sqrt(max(fan, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def)
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(defs, is_leaf=_is_def))

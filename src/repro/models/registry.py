@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` -> (ModelConfig, model module)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Tuple
+
+ARCHS = {
+    "zamba2-1.2b": ("repro.configs.zamba2_1p2b", "repro.models.hybrid"),
+    "kimi-k2-1t-a32b": ("repro.configs.kimi_k2_1t_a32b", "repro.models.moe"),
+    "deepseek-v2-236b": ("repro.configs.deepseek_v2_236b", "repro.models.moe"),
+    "qwen3-4b": ("repro.configs.qwen3_4b", "repro.models.transformer"),
+    "qwen2-72b": ("repro.configs.qwen2_72b", "repro.models.transformer"),
+    "qwen2.5-32b": ("repro.configs.qwen2p5_32b", "repro.models.transformer"),
+    "smollm-360m": ("repro.configs.smollm_360m", "repro.models.transformer"),
+    "mamba2-370m": ("repro.configs.mamba2_370m", "repro.models.mamba2"),
+    "musicgen-large": ("repro.configs.musicgen_large",
+                       "repro.models.transformer"),
+    "internvl2-76b": ("repro.configs.internvl2_76b",
+                      "repro.models.transformer"),
+}
+
+
+def get(arch: str, reduced: bool = False) -> Tuple[object, object]:
+    """Returns (config, model_module)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    cfg_mod, model_mod = ARCHS[arch]
+    cmod = importlib.import_module(cfg_mod)
+    mmod = importlib.import_module(model_mod)
+    cfg = cmod.reduced() if reduced else cmod.CONFIG
+    return cfg, mmod
+
+
+def names():
+    return sorted(ARCHS)

@@ -1,0 +1,198 @@
+"""Dense decoder-only transformer (llama/qwen family).
+
+Covers: qwen3-4b (qk_norm), qwen2-72b / qwen2.5-32b (QKV bias),
+smollm-360m, musicgen-large (audio-token backbone), internvl2-76b
+(VLM backbone with patch-embedding prefix stub).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.layers import (Ctx, NOCTX, apply_rope, attn_chunked,
+                                 attn_decode, attn_full, gated_mlp, rms_norm,
+                                 rope_tables, update_cache)
+from repro.models.params import ParamDef
+
+
+def _kv_axis(cfg, tp: int):
+    return "tensor" if (tp > 1 and cfg.n_kv_heads % tp == 0) else None
+
+
+def block_defs(cfg, tp: int = 1):
+    d, hd = cfg.d_model, cfg.head_dim
+    He = cfg.heads_padded(tp)
+    Hkv = cfg.n_kv_heads
+    kv_ax = _kv_axis(cfg, tp)
+    defs = {
+        "ln1": ParamDef((d,), (None,), init="ones"),
+        "ln2": ParamDef((d,), (None,), init="ones"),
+        "wq": ParamDef((d, He, hd), ("embed", "tensor", None), fan_in=d),
+        "wk": ParamDef((d, Hkv, hd), ("embed", kv_ax, None), fan_in=d),
+        "wv": ParamDef((d, Hkv, hd), ("embed", kv_ax, None), fan_in=d),
+        "wo": ParamDef((He, hd, d), ("tensor", None, "embed"), fan_in=He * hd),
+        "wg": ParamDef((d, cfg.d_ff), ("embed", "tensor"), fan_in=d),
+        "wu": ParamDef((d, cfg.d_ff), ("embed", "tensor"), fan_in=d),
+        "wd": ParamDef((cfg.d_ff, d), ("tensor", "embed"), fan_in=cfg.d_ff),
+    }
+    if cfg.qkv_bias:
+        defs.update({
+            "bq": ParamDef((He, hd), ("tensor", None), init="zeros"),
+            "bk": ParamDef((Hkv, hd), (kv_ax, None), init="zeros"),
+            "bv": ParamDef((Hkv, hd), (kv_ax, None), init="zeros"),
+        })
+    if cfg.qk_norm:
+        defs.update({
+            "qnorm": ParamDef((hd,), (None,), init="ones"),
+            "knorm": ParamDef((hd,), (None,), init="ones"),
+        })
+    return defs
+
+
+def param_defs(cfg, tp: int = 1):
+    return {
+        **common.embed_defs(cfg),
+        "layers": common.stack_layer_defs(block_defs(cfg, tp), cfg.n_layers),
+    }
+
+
+def _qkv(p, x, cfg, cos, sin, ctx: Ctx, hmask):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if hmask is not None:
+        q = q * hmask[None, None, :, None]
+    q = ctx.constrain(q, "batch", "seq", "tensor", None)
+    return q, k, v
+
+
+def _attn_out(p, o, ctx: Ctx, hmask):
+    if hmask is not None:
+        o = o * hmask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return ctx.constrain(out, "batch", "seq", None)
+
+
+def _block_train(cfg, ctx: Ctx, cos, sin, hmask, use_full_attn: bool):
+    def fn(carry, xs):
+        h, aux = carry
+        (p,) = xs
+        x = rms_norm(h, p["ln1"])
+        q, k, v = _qkv(p, x, cfg, cos, sin, ctx, hmask)
+        g = max(cfg.n_heads // cfg.n_kv_heads, 1)
+        if use_full_attn:
+            o = attn_full(q, k, v, group_size=g)
+        else:
+            o = attn_chunked(q, k, v, q_chunk=cfg.attn_chunk,
+                             kv_chunk=cfg.attn_chunk, group_size=g, ctx=ctx)
+        h = h + _attn_out(p, o, ctx, hmask)
+        x = rms_norm(h, p["ln2"])
+        h = h + ctx.constrain(gated_mlp(p, x, ctx), "batch", "seq", None)
+        h = ctx.constrain(h, "batch", "seq", None)
+        return (h, aux), None
+    return fn
+
+
+def forward(params, batch, cfg, ctx: Ctx = NOCTX, return_cache: bool = False,
+            return_hidden: bool = False):
+    tokens = batch["tokens"]
+    h = common.embed_tokens(params, tokens, cfg, ctx)
+    h = common.maybe_prepend_embeds(h, batch, ctx)
+    B, S = h.shape[0], h.shape[1]
+    pos = jnp.arange(S)
+    cos, sin = rope_tables(pos[None, :], cfg.head_dim, cfg.rope_theta)
+    tp = ctx.axis_size("tensor")
+    hmask = common.head_mask(cfg, tp, h.dtype)
+    use_full = S <= 2048
+
+    if not return_cache:
+        blk = _block_train(cfg, ctx, cos, sin, hmask, use_full)
+        h, _, _ = common.scan_blocks(blk, h, (params["layers"],),
+                                     remat=(cfg.remat == "block"))
+        if return_hidden:
+            return h
+        return common.unembed(params, h, cfg, ctx)
+
+    # prefill: also emit per-layer kv caches
+    def blk(carry, xs):
+        h, _ = carry
+        (p,) = xs
+        x = rms_norm(h, p["ln1"])
+        q, k, v = _qkv(p, x, cfg, cos, sin, ctx, hmask)
+        g = max(cfg.n_heads // cfg.n_kv_heads, 1)
+        if use_full:
+            o = attn_full(q, k, v, group_size=g)
+        else:
+            o = attn_chunked(q, k, v, q_chunk=cfg.attn_chunk,
+                             kv_chunk=cfg.attn_chunk, group_size=g, ctx=ctx)
+        h = h + _attn_out(p, o, ctx, hmask)
+        x = rms_norm(h, p["ln2"])
+        h = h + gated_mlp(p, x, ctx)
+        h = ctx.constrain(h, "batch", "seq", None)
+        k = ctx.constrain(k, "batch", "kv_seq", None, None)
+        v = ctx.constrain(v, "batch", "kv_seq", None, None)
+        return (h, None), (k, v)
+
+    h, _, (kc, vc) = common.scan_blocks(blk, h, (params["layers"],))
+    logits = common.unembed(params, h, cfg, ctx)
+    return logits, {"k": kc, "v": vc,
+                    "pos": jnp.full((), S - 1, jnp.int32)}
+
+
+def cache_defs(cfg, B: int, S: int, tp: int = 1):
+    hd, Hkv, L = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+    kv_ax = None  # decode caches shard their length axis, not heads
+    return {
+        "k": ParamDef((L, B, S, Hkv, hd),
+                      ("layers", "batch", "kv_seq", kv_ax, None),
+                      init="zeros"),
+        "v": ParamDef((L, B, S, Hkv, hd),
+                      ("layers", "batch", "kv_seq", kv_ax, None),
+                      init="zeros"),
+        "pos": ParamDef((), (), init="zeros"),
+    }
+
+
+def decode_step(params, cache, tokens, cfg, ctx: Ctx = NOCTX):
+    """tokens (B,1); attends the full cache up to cache['pos'] + itself."""
+    B = tokens.shape[0]
+    h = common.embed_tokens(params, tokens, cfg, ctx)
+    pos = cache["pos"] + 1                      # position of the new token
+    cos, sin = rope_tables(jnp.full((B, 1), pos), cfg.head_dim,
+                           cfg.rope_theta)
+    tp = ctx.axis_size("tensor")
+    hmask = common.head_mask(cfg, tp, h.dtype)
+
+    def blk(carry, xs):
+        h, _ = carry
+        p, kc, vc = xs
+        x = rms_norm(h, p["ln1"])
+        q, k, v = _qkv(p, x, cfg, cos, sin, ctx, hmask)
+        # attention reads the OLD cache + an explicit self-token term;
+        # the cache write happens once, post-scan, fully aliased.
+        o = attn_decode(q, kc, vc, pos, k_new=k, v_new=v, ctx=ctx,
+                        group_size=max(cfg.n_heads // cfg.n_kv_heads, 1))
+        h = h + _attn_out(p, o, ctx, hmask)
+        x = rms_norm(h, p["ln2"])
+        h = h + gated_mlp(p, x, ctx)
+        return (h, None), (k, v)
+
+    (h, _), (k_new, v_new) = jax.lax.scan(
+        blk, (h, None), (params["layers"], cache["k"], cache["v"]))
+    kc = update_cache(cache["k"], k_new, pos, ctx, seq_axis=2)
+    vc = update_cache(cache["v"], v_new, pos, ctx, seq_axis=2)
+    logits = common.unembed(params, h, cfg, ctx)
+    return logits, {"k": kc, "v": vc, "pos": pos}

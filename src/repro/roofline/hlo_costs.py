@@ -1,0 +1,207 @@
+"""Exact HLO cost extraction with while-loop trip-count weighting.
+
+``compiled.cost_analysis()`` counts a while body ONCE, so a scan-over-layers
+model under-reports FLOPs by ~n_layers x.  XLA annotates every while with
+``backend_config={"known_trip_count":{"n":...}}``; this module parses the
+compiled HLO text, builds the computation call graph (while bodies weighted
+by their trip counts, fusions/calls by 1), and accumulates
+
+* dot FLOPs        (2 x |result| x |contracting dims|),
+* dot bytes        (lhs + rhs + result — the heavy HBM traffic),
+* collective bytes (operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute).
+
+Elementwise FLOPs/bytes are not counted (dots dominate every assigned
+architecture); the §Roofline notes carry this caveat.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def _shape_of(type_str: str) -> Tuple[Tuple[int, ...], int]:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return (), 0
+    dt, dims = m.group(1), m.group(2)
+    shape = tuple(int(d) for d in dims.split(",") if d)
+    return shape, _DTYPE_BYTES.get(dt, 0)
+
+
+def _nbytes(type_str: str) -> int:
+    shape, b = _shape_of(type_str)
+    n = 1
+    for d in shape:
+        n *= d
+    return n * b
+
+
+def parse_hlo_costs(hlo: str) -> Dict:
+    """Returns {'flops', 'dot_bytes', 'collectives': {...}, 'n_while'}."""
+    # --- split into computations -------------------------------------------
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY"):
+            cur = "ENTRY"
+            comps[cur] = []
+            continue
+        if ls.startswith("%") and ls.endswith("{"):
+            cur = ls.split()[0].lstrip("%")
+            comps[cur] = []
+            continue
+        if ls == "}":
+            continue
+        if cur is not None:
+            comps[cur].append(ls)
+
+    # --- per-computation: local defs, raw costs, call edges ------------------
+    per: Dict[str, Dict] = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        shapes: Dict[str, str] = {}
+        for ls in lines:
+            m = _DEF_RE.match(ls)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+        flops = 0.0
+        dbytes = 0.0
+        coll = {c: 0.0 for c in _COLLECTIVES}
+        my_edges: List[Tuple[str, float]] = []
+        for ls in lines:
+            m = _DEF_RE.match(ls)
+            if not m:
+                continue
+            rhs = m.group(2)
+            res_type = rhs.split(" ", 1)[0]
+            # call edges
+            wm = re.search(r"\bwhile\(", rhs)
+            if wm:
+                trip = 1.0
+                tm = _TRIP_RE.search(rhs)
+                if tm:
+                    trip = float(tm.group(1))
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if bm:
+                    my_edges.append((bm.group(1), trip))
+                if cm:
+                    my_edges.append((cm.group(1), trip))
+                continue
+            for kw in ("calls=", "to_apply="):
+                km = re.search(kw + r"%?([\w.\-]+)", rhs)
+                if km:
+                    my_edges.append((km.group(1), 1.0))
+            # dot costs
+            dm = re.search(r"\bdot\(([^)]*)\)", rhs)
+            if dm:
+                ops = [o.strip() for o in dm.group(1).split(",")]
+                op_types = []
+                for o in ops[:2]:
+                    o = o.lstrip("%")
+                    # operand may carry an inline type or be a pure name
+                    if "[" in o and not o.startswith("%"):
+                        tok = o.split()
+                        if _SHAPE_RE.match(tok[0]):
+                            op_types.append(tok[0])
+                            continue
+                        o = tok[-1].lstrip("%")
+                    ref = shapes.get(o, "")
+                    op_types.append(ref.split(" ", 1)[0])
+                res_shape, _ = _shape_of(res_type)
+                lhs_shape, _ = _shape_of(op_types[0]) if op_types else ((), 0)
+                cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                contract = 1
+                if cm2 and lhs_shape:
+                    for d in cm2.group(1).split(","):
+                        if d:
+                            contract *= lhs_shape[int(d)]
+                out_elems = 1
+                for d in res_shape:
+                    out_elems *= d
+                flops += 2.0 * out_elems * contract
+                dbytes += _nbytes(res_type)
+                for t in op_types:
+                    dbytes += _nbytes(t)
+                continue
+            # collectives
+            for cname in _COLLECTIVES:
+                if re.search(rf"\b{cname}\(", rhs):
+                    args = rhs.split(f"{cname}(", 1)[1]
+                    depth, buf = 1, []
+                    for ch in args:
+                        if ch == "(":
+                            depth += 1
+                        elif ch == ")":
+                            depth -= 1
+                            if depth == 0:
+                                break
+                        buf.append(ch)
+                    inner = "".join(buf)
+                    ops = [o.strip().lstrip("%") for o in inner.split(",")]
+                    nb = 0
+                    for o in ops:
+                        key = o.split()[-1].lstrip("%") if o else ""
+                        ref = shapes.get(key, "")
+                        if ref:
+                            nb += _nbytes(ref.split(" ", 1)[0])
+                        elif _SHAPE_RE.match(o):
+                            nb += _nbytes(o.split()[0])
+                    coll[cname] += nb
+                    break
+        per[name] = {"flops": flops, "dot_bytes": dbytes, "coll": coll}
+        edges[name] = my_edges
+
+    # --- propagate multipliers from ENTRY -----------------------------------
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult["ENTRY"] = 1.0
+    for _ in range(16):  # call graphs are shallow DAGs
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new["ENTRY"] = 1.0
+        for caller, es in edges.items():
+            w = mult.get(caller, 0.0)
+            if w == 0:
+                continue
+            for callee, t in es:
+                if callee in new:
+                    new[callee] += w * t
+        for k in new:
+            if abs(new[k] - mult[k]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+
+    total = {"flops": 0.0, "dot_bytes": 0.0, "n_while": 0}
+    coll_total = {c: 0.0 for c in _COLLECTIVES}
+    for name, c in per.items():
+        w = max(mult.get(name, 0.0), 0.0)
+        if w == 0 and name != "ENTRY":
+            continue
+        w = max(w, 1.0) if name == "ENTRY" else w
+        total["flops"] += w * c["flops"]
+        total["dot_bytes"] += w * c["dot_bytes"]
+        for k in _COLLECTIVES:
+            coll_total[k] += w * c["coll"][k]
+    total["n_while"] = sum(1 for es in edges.values() for _ in es)
+    coll_total["total_bytes"] = sum(coll_total.values())
+    total["collectives"] = coll_total
+    return total

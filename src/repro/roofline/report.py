@@ -1,0 +1,137 @@
+"""§Roofline report generator: reads reports/dryrun/*.json, emits the
+per-(arch x shape) three-term roofline table as markdown + JSON.
+
+Terms (per DESIGN.md §7; TPU v5e constants):
+  compute_s    = HLO dot FLOPs (trip-count-corrected) / (chips * 197e12)
+  memory_s     = HBM floor = (argument+output bytes)/chip / 819e9
+                 (upper bound from dot operand traffic also reported)
+  collective_s = collective operand bytes (trip-corrected) / 50e9 per chip
+
+``MODEL_FLOPS / HLO_FLOPs`` exposes remat & dispatch waste; dominant term =
+argmax; roofline step time = max of terms (perfect overlap assumption);
+MFU = MODEL_FLOPS / (chips * peak * step_time).
+
+  PYTHONPATH=src python -m repro.roofline.report [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES
+from repro.models import registry
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports"
+
+
+def model_flops_for(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    tokens = shape.seq_len * shape.global_batch
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze(rec: dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg, _ = registry.get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    flops_dev = rec.get("hlo_dot_flops") or rec["cost"].get("flops", 0.0)
+    mem = rec["memory"]
+    hbm_floor = mem["argument_bytes"] + mem["output_bytes"]
+    dot_bytes = rec.get("hlo_dot_bytes", 0.0)
+    coll = rec["collectives"]["total_bytes"]
+    mf = model_flops_for(cfg, shape)
+    compute_s = flops_dev / PEAK_FLOPS
+    mem_s = hbm_floor / HBM_BW
+    mem_hi_s = dot_bytes / HBM_BW
+    coll_s = coll / ICI_BW
+    step = max(compute_s, mem_s, coll_s)
+    terms = {"compute": compute_s, "memory": mem_s, "collective": coll_s}
+    mfu = mf / (n_dev * PEAK_FLOPS * step) if step > 0 else 0.0
+    total_dev_bytes = (mem["argument_bytes"] + mem["output_bytes"]
+                       + mem["temp_bytes"] - mem["alias_bytes"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "flops_per_dev": flops_dev,
+        "model_flops": mf,
+        "useful_frac": mf / (flops_dev * n_dev) if flops_dev else 0.0,
+        "compute_s": compute_s,
+        "memory_s": mem_s,
+        "memory_upper_s": mem_hi_s,
+        "collective_s": coll_s,
+        "dominant": max(terms, key=terms.get),
+        "step_s": step,
+        "mfu": mfu,
+        "hbm_gib": total_dev_bytes / 2**30,
+        "fits_v5e": total_dev_bytes <= HBM_PER_CHIP,
+    }
+
+
+def load_all(mesh: str) -> List[Dict]:
+    rows = []
+    for p in sorted((REPORT_DIR / "dryrun").glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["reason"]})
+            continue
+        r = analyze(rec)
+        if r:
+            rows.append(r)
+        else:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "error": rec.get("error", "?")})
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "step s | MFU | useful FLOPs | HBM GiB | fits v5e |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip (sub-quadratic only) | — | — | — | — | — |\n")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                       f"{r['error'][:40]} |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['step_s']:.3f} | {r['mfu']:.1%} | "
+            f"{r['useful_frac']:.1%} | {r['hbm_gib']:.1f} | "
+            f"{'yes' if r['fits_v5e'] else 'NO'} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    rows = load_all(args.mesh)
+    md = to_markdown(rows)
+    print(md)
+    (REPORT_DIR / f"roofline_{args.mesh}.json").write_text(
+        json.dumps(rows, indent=2))
+    (REPORT_DIR / f"roofline_{args.mesh}.md").write_text(md)
+    print(f"# wrote reports/roofline_{args.mesh}.{{json,md}}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Train step factory: loss, grads, AdamW update — model-agnostic."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, NOCTX
+from repro.train import optimizer as opt_lib
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Masked next-token CE.  labels < 0 are ignored.
+
+    Implemented without take_along_axis: a gather along the (TP-sharded)
+    vocab axis forces GSPMD to all-gather the full f32 logits; the
+    iota-select keeps every op elementwise/reduce over the sharded axis
+    (PERF: EXPERIMENTS.md Perf-3 — 13 GiB of temp on the smollm train cell
+    came from one replicated f32 logits buffer).
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape,
+                                          lg.ndim - 1)
+    sel = (vocab_iota == jnp.maximum(labels, 0)[..., None])
+    gold = jnp.sum(jnp.where(sel, lg, 0.0), axis=-1)
+    nll = lse - gold
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def make_loss_fn(model, cfg, ctx: Ctx = NOCTX, aux_weight: float = 0.01):
+    def loss_fn(params, batch):
+        out = model.forward(params, batch, cfg, ctx)
+        if isinstance(out, tuple):
+            logits, aux = out
+        else:
+            logits, aux = out, 0.0
+        loss = cross_entropy(logits, batch["labels"])
+        total = loss + aux_weight * aux
+        return total, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(model, cfg, opt_cfg: opt_lib.OptConfig,
+                    ctx: Ctx = NOCTX):
+    loss_fn = make_loss_fn(model, cfg, ctx)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = opt_lib.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {**metrics, **om, "total_loss": total}
+        return params, opt_state, metrics
+
+    return train_step

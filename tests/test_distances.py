@@ -1,0 +1,152 @@
+"""Distance layer: batched wavefront engine vs row-major numpy oracles,
+metric axioms, and the paper's consistency property (Def. 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consistency import check_consistency
+from repro.distances import base, get, names
+from repro.distances.oracles import ORACLES
+
+RNG = np.random.default_rng(1234)
+ALIGN = ["dtw", "erp", "frechet", "levenshtein"]
+ALL = ["euclidean", "hamming"] + ALIGN
+
+
+def _rand_pair(name, lx, ly, d=2, rng=RNG):
+    dist = get(name)
+    if not dist.variable_length:
+        ly = lx
+    if dist.string:
+        return rng.integers(0, 6, size=(lx,)), rng.integers(0, 6, size=(ly,))
+    return (rng.normal(size=(lx, d)).astype(np.float32),
+            rng.normal(size=(ly, d)).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("lx,ly", [(1, 1), (3, 9), (8, 8), (13, 5), (20, 20)])
+def test_matches_oracle(name, lx, ly):
+    x, y = _rand_pair(name, lx, ly)
+    got = float(get(name).pair(x, y))
+    want = ORACLES[{"frechet": "frechet"}.get(name, name)](x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ALIGN)
+def test_batch_matches_pairs(name):
+    dist = get(name)
+    B, L = 16, 10
+    if dist.string:
+        xs = RNG.integers(0, 5, size=(B, L))
+        ys = RNG.integers(0, 5, size=(B, L))
+    else:
+        xs = RNG.normal(size=(B, L, 3)).astype(np.float32)
+        ys = RNG.normal(size=(B, L, 3)).astype(np.float32)
+    got = np.asarray(dist.batch(xs, ys))
+    want = np.array([ORACLES[name if name != "frechet" else "frechet"](xs[b], ys[b])
+                     for b in range(B)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_identity_and_symmetry(name):
+    dist = get(name)
+    x, y = _rand_pair(name, 7, 7)
+    assert float(dist.pair(x, x)) == pytest.approx(0.0, abs=1e-5)
+    if dist.metric:
+        assert float(dist.pair(x, y)) == pytest.approx(
+            float(dist.pair(y, x)), rel=1e-5, abs=1e-5)
+
+
+@pytest.mark.parametrize("name", [n for n in ALL if get(n).metric])
+def test_triangle_inequality(name):
+    dist = get(name)
+    for _ in range(10):
+        x, y = _rand_pair(name, 6, 8)
+        _, z = _rand_pair(name, 6, 7)
+        dxy = float(dist.pair(x, y))
+        dxz = float(dist.pair(x, z))
+        dzy = float(dist.pair(z, y))
+        assert dxy <= dxz + dzy + 1e-4
+
+
+def test_dtw_violates_triangle_inequality_exists():
+    """The paper's running point: DTW is not a metric.  Exhibit a violation."""
+    d = get("dtw")
+    x = np.array([[0.0], [0.0]], np.float32)
+    y = np.array([[1.0], [1.0]], np.float32)
+    z = np.array([[0.0], [1.0]], np.float32)
+    # d(x,y)=2 but d(x,z)+d(z,y) = 1+1... need strict violation; classic one:
+    a = np.array([[0.0]], np.float32)
+    b = np.array([[1.0], [1.0], [1.0]], np.float32)
+    c = np.array([[0.0], [1.0]], np.float32)
+    dab = float(d.pair(a, b))
+    dac = float(d.pair(a, c))
+    dcb = float(d.pair(c, b))
+    assert dab > dac + dcb  # 3 > 1 + 0? -> 3 > 1; violation
+    assert not d.metric
+
+
+def test_registry_flags():
+    assert set(names()) >= {"euclidean", "hamming", "dtw", "erp", "frechet",
+                            "levenshtein"}
+    with pytest.raises(ValueError):
+        base.require_metric("dtw")
+    assert base.require_consistent("dtw").name == "dtw"
+    assert base.require_metric("erp").metric
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_variable_length_padding_invariance(name):
+    """Padding must never leak into the result."""
+    dist = get(name)
+    lx, ly = (5, 9) if dist.variable_length else (6, 6)
+    x, y = _rand_pair(name, lx, ly)
+    base_val = float(dist.pair(x, y))
+    L = 16
+    if dist.string:
+        xp = np.full((L,), 3, np.int64); xp[:lx] = x
+        yp = np.full((L,), 4, np.int64); yp[:ly] = y
+    else:
+        xp = np.ones((L, x.shape[1]), np.float32) * 7; xp[:lx] = x
+        yp = np.ones((L, y.shape[1]), np.float32) * -7; yp[:ly] = y
+    padded_val = float(dist.pair(xp, yp, lx, ly))
+    np.testing.assert_allclose(padded_val, base_val, rtol=1e-5, atol=1e-5)
+
+
+# --- hypothesis property tests -------------------------------------------
+
+@st.composite
+def _string_pair(draw):
+    lq = draw(st.integers(2, 7))
+    lx = draw(st.integers(2, 7))
+    q = draw(st.lists(st.integers(0, 3), min_size=lq, max_size=lq))
+    x = draw(st.lists(st.integers(0, 3), min_size=lx, max_size=lx))
+    return np.array(q), np.array(x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_string_pair())
+def test_consistency_property_levenshtein(pair):
+    """Paper Def. 1 holds for Levenshtein on arbitrary short strings."""
+    q, x = pair
+    assert check_consistency(get("levenshtein"), q, x)
+
+
+@st.composite
+def _series_pair(draw):
+    lq = draw(st.integers(2, 6))
+    lx = draw(st.integers(2, 6))
+    q = draw(st.lists(st.floats(-3, 3, width=32), min_size=lq * 2, max_size=lq * 2))
+    x = draw(st.lists(st.floats(-3, 3, width=32), min_size=lx * 2, max_size=lx * 2))
+    return (np.array(q, np.float32).reshape(lq, 2),
+            np.array(x, np.float32).reshape(lx, 2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_series_pair())
+@pytest.mark.parametrize("name", ["erp", "frechet", "dtw"])
+def test_consistency_property_timeseries(name, pair):
+    q, x = pair
+    assert check_consistency(get(name), q, x)

@@ -1,0 +1,97 @@
+"""Device-mode retrieval (flattened net + static-capacity compaction) and
+the fleet query: exactness vs brute force, pruning accounting, overflow
+retry, embedding retrieval integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import (FlatNet, device_range_query, flatten_net,
+                                    fleet_range_query, host_reference_hits)
+from repro.core.refnet import ReferenceNet
+from repro.data.synthetic import proteins, trajectories
+from repro.distances import get
+
+RNG = np.random.default_rng(31)
+
+
+def _net(data, dist_name, eps_prime):
+    return ReferenceNet(get(dist_name), data, eps_prime=eps_prime,
+                        tight_bounds=True).build()
+
+
+@pytest.mark.parametrize("dist_name,gen,eps_prime,eps", [
+    ("levenshtein", proteins, 1.0, 2.0),
+    ("erp", trajectories, 0.5, 1.0),
+])
+def test_device_query_matches_brute_force(dist_name, gen, eps_prime, eps):
+    data = gen(160, seed=8)
+    flat = flatten_net(_net(data, dist_name, eps_prime))
+    qs = data[RNG.integers(0, len(data), 6)].copy()
+    hits, stats = device_range_query(flat, qs, eps)
+    want = host_reference_hits(flat, qs, eps)
+    np.testing.assert_array_equal(hits, want)
+    assert stats["total_evals"] > 0
+
+
+def test_device_query_prunes():
+    data = proteins(400, seed=9)
+    flat = flatten_net(_net(data, "levenshtein", 1.0))
+    qs = data[:4]
+    _, stats = device_range_query(flat, qs, eps=1.0)
+    naive = 4 * len(data)
+    assert stats["total_evals"] < 0.8 * naive, stats
+
+
+def test_capacity_overflow_retry():
+    data = proteins(120, seed=10)
+    flat = flatten_net(_net(data, "levenshtein", 1.0))
+    qs = data[:3]
+    hits, stats = device_range_query(flat, qs, eps=6.0, capacity=8)
+    want = host_reference_hits(flat, qs, 6.0)
+    np.testing.assert_array_equal(hits, want)
+    assert stats["capacity"] > 8  # ladder kicked in
+
+
+def test_fleet_union_is_exact_and_survives_dead_shard():
+    data = proteins(300, seed=11)
+    thirds = np.array_split(np.arange(len(data)), 3)
+    flats = [flatten_net(_net(data[ix], "levenshtein", 1.0))
+             for ix in thirds]
+    qs = data[:3]
+    res, _ = fleet_range_query(flats, qs, eps=2.0)
+    got = np.zeros((3, len(data)), bool)
+    for ix, h in zip(thirds, res):
+        got[:, ix] = h
+    flat_all = FlatNet  # brute force on the union
+    want = host_reference_hits(
+        flatten_net(_net(data, "levenshtein", 1.0)), qs, 2.0)
+    np.testing.assert_array_equal(got, want)
+    # dead shard: remaining shards still exact on their partitions
+    res2, _ = fleet_range_query(flats, qs, eps=2.0, dead=(1,))
+    assert res2[1] is None
+    np.testing.assert_array_equal(res2[0], res[0])
+    np.testing.assert_array_equal(res2[2], res[2])
+
+
+def test_embedding_retrieval_end_to_end():
+    from repro.core.embedding_retrieval import EmbeddingRetriever, embed_windows
+    from repro.models import registry
+    from repro.models.params import init_params
+
+    cfg, mod = registry.get("smollm-360m", reduced=True)
+    params = init_params(mod.param_defs(cfg), jax.random.PRNGKey(4),
+                         jnp.float32)
+    rng = np.random.default_rng(6)
+    seqs = [rng.integers(0, cfg.vocab, size=(48,)) for _ in range(4)]
+    seqs.append(seqs[0].copy())  # a duplicate sequence
+    vecs, meta = embed_windows(mod, params, cfg, seqs, window=8)
+    ret = EmbeddingRetriever(vecs, meta, eps_prime=0.02)
+    # a window of the duplicate sequence retrieves its twin at distance ~0
+    probe_i = next(i for i, m in enumerate(meta) if m.seq_id == 4)
+    got = ret.query(vecs[probe_i], eps=1e-4)
+    seq_ids = {m.seq_id for m, _ in got}
+    assert {0, 4} <= seq_ids
+    near = ret.nearest(vecs[probe_i])
+    assert near is not None and near[1] <= 1e-4

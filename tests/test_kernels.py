@@ -1,0 +1,100 @@
+"""Pallas kernels (interpret mode) vs pure-jnp/ numpy oracles.
+
+Per the deliverable: each kernel is swept over shapes and dtypes and
+assert_allclose'd against the ref.py oracle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.distances.oracles import ORACLES
+from repro.kernels import ops
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [
+    (1, 4, 4, 1),
+    (3, 8, 8, 2),
+    (8, 16, 16, 4),
+    (5, 20, 20, 2),   # paper window size l = 20
+    (7, 9, 17, 3),    # rectangular: query segment vs window
+    (16, 33, 20, 1),
+    (4, 20, 24, 2),   # lambda_0-shifted segment lengths
+]
+
+
+def _gen(mode, B, Lx, Ly, d, dtype):
+    if mode == "lev":
+        return (RNG.integers(0, 7, size=(B, Lx)),
+                RNG.integers(0, 7, size=(B, Ly)))
+    xs = RNG.normal(size=(B, Lx, d)).astype(dtype)
+    ys = RNG.normal(size=(B, Ly, d)).astype(dtype)
+    return xs, ys
+
+
+@pytest.mark.parametrize("mode", list(ops.MODES))
+@pytest.mark.parametrize("shape", SHAPES)
+def test_wavefront_kernel_matches_ref(mode, shape):
+    B, Lx, Ly, d = shape
+    xs, ys = _gen(mode, B, Lx, Ly, d, np.float32)
+    got = np.asarray(ops.wavefront(xs, ys, mode, interpret=True))
+    want = np.asarray(ops.wavefront_ref(xs, ys, mode))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", list(ops.MODES))
+def test_wavefront_kernel_matches_numpy_oracle(mode):
+    B, Lx, Ly, d = 6, 11, 13, 2
+    xs, ys = _gen(mode, B, Lx, Ly, d, np.float32)
+    got = np.asarray(ops.wavefront(xs, ys, mode, interpret=True))
+    oname = {"dtw": "dtw", "erp": "erp", "dfd": "frechet",
+             "lev": "levenshtein"}[mode]
+    want = np.array([ORACLES[oname](xs[b], ys[b]) for b in range(B)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_wavefront_kernel_dtypes(dtype):
+    B, L = 4, 8
+    if np.issubdtype(dtype, np.integer):
+        xs = RNG.integers(-3, 3, size=(B, L, 2)).astype(dtype)
+        ys = RNG.integers(-3, 3, size=(B, L, 2)).astype(dtype)
+    else:
+        xs = RNG.normal(size=(B, L, 2)).astype(dtype)
+        ys = RNG.normal(size=(B, L, 2)).astype(dtype)
+    got = np.asarray(ops.wavefront(xs, ys, "dtw", interpret=True))
+    want = np.asarray(ops.wavefront_ref(
+        np.asarray(xs, np.float32), np.asarray(ys, np.float32), "dtw"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_b", [1, 4, 16])
+def test_wavefront_kernel_block_sizes(block_b):
+    """Grid/BlockSpec batch tiling must not change results (incl. padding)."""
+    B, L = 10, 12
+    xs = RNG.normal(size=(B, L, 2)).astype(np.float32)
+    ys = RNG.normal(size=(B, L, 2)).astype(np.float32)
+    got = np.asarray(ops.wavefront(xs, ys, "erp", block_b=block_b,
+                                   interpret=True))
+    want = np.asarray(ops.wavefront_ref(xs, ys, "erp"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 3), (16, 16, 8), (37, 51, 19),
+                                   (128, 128, 64), (130, 5, 33)])
+def test_pairwise_l2_kernel(shape):
+    M, N, d = shape
+    x = RNG.normal(size=(M, d)).astype(np.float32)
+    y = RNG.normal(size=(N, d)).astype(np.float32)
+    got = np.asarray(ops.pairwise_l2(x, y, interpret=True))
+    want = np.asarray(ops.pairwise_l2_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (32, 128), (128, 32)])
+def test_pairwise_l2_tilings(bm, bn):
+    x = RNG.normal(size=(40, 12)).astype(np.float32)
+    y = RNG.normal(size=(70, 12)).astype(np.float32)
+    got = np.asarray(ops.pairwise_l2(x, y, bm=bm, bn=bn, interpret=True))
+    want = np.asarray(ops.pairwise_l2_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,146 @@
+"""End-to-end subsequence matching (paper §7): the 5-step pipeline vs brute
+force, for all three query types, across distances and index backends."""
+
+import numpy as np
+import pytest
+
+from repro.core import segmentation as seg
+from repro.core.matching import (SubsequenceMatcher, brute_force_longest,
+                                 brute_force_nearest, brute_force_range)
+from repro.distances import get
+
+RNG = np.random.default_rng(77)
+LAM, L0 = 8, 1
+
+
+def _plant_string_case(rng, mutate=True):
+    seqs = [rng.integers(0, 8, size=(rng.integers(22, 30),)) for _ in range(3)]
+    Q = rng.integers(0, 8, size=(20,))
+    Q[3:13] = seqs[1][4:14]
+    if mutate:
+        Q[7] = (Q[7] + 1) % 8
+    return Q, seqs
+
+
+def _plant_series_case(rng):
+    seqs = [np.cumsum(rng.normal(scale=0.3, size=(26, 2)), 0)
+            for _ in range(2)]
+    Q = np.cumsum(rng.normal(scale=0.3, size=(18, 2)), 0)
+    Q[2:14] = seqs[0][6:18] + rng.normal(scale=0.01, size=(12, 2))
+    return Q, seqs
+
+
+def test_window_partition_lemma2():
+    """Windows have length lambda//2 and tile the sequence."""
+    x = np.arange(23)
+    wins, meta = seg.partition_windows([x], LAM)
+    assert wins.shape[1] == LAM // 2
+    assert [w.start for w in meta] == [0, 4, 8, 12, 16]
+    assert np.all(wins[2] == x[8:12])
+
+
+def test_query_segments_band():
+    Q = np.arange(12)
+    buckets = seg.query_segments(Q, LAM, L0)
+    assert sorted(buckets) == [3, 4, 5]
+    arr, segs = buckets[4]
+    assert len(segs) == 9  # |Q| - l + 1
+    total = sum(len(s) for _, s in buckets.values())
+    assert total <= (2 * L0 + 1) * len(Q)  # paper §5 bound
+
+
+@pytest.mark.parametrize("index", ["refnet", "covertree", "mv", "linear"])
+def test_type1_completeness_within_envelope(index):
+    """Every |SX| = lambda pair (the Lemma-2-guaranteed envelope) is found."""
+    dist = get("levenshtein")
+    found_any = False
+    for trial in range(4):
+        rng = np.random.default_rng(100 + trial)
+        Q, seqs = _plant_string_case(rng)
+        m = SubsequenceMatcher("levenshtein", LAM, L0, index=index).build(seqs)
+        got = {p.key() for p in m.query_range(Q, 1.0)}
+        want = {p.key() for p in brute_force_range(
+            dist, Q, seqs, LAM, L0, 1.0, x_len_exact=LAM)}
+        assert want <= got, f"missing pairs: {sorted(want - got)[:5]}"
+        found_any = found_any or bool(want)
+        for p in got:
+            pass  # keys only
+        for p in m.query_range(Q, 1.0):
+            assert p.distance <= 1.0
+            assert p.x_len >= LAM and p.q_len >= LAM
+            assert abs(p.x_len - p.q_len) <= L0
+    assert found_any, "test cases never produced a planted match"
+
+
+@pytest.mark.parametrize("dist_name", ["levenshtein", "erp", "frechet"])
+def test_type2_longest_matches_brute_force(dist_name):
+    for trial in range(4):
+        rng = np.random.default_rng(200 + trial)
+        if dist_name == "levenshtein":
+            Q, seqs = _plant_string_case(rng)
+            eps = 1.0
+        else:
+            Q, seqs = _plant_series_case(rng)
+            eps = 0.5 if dist_name == "erp" else 0.25
+        m = SubsequenceMatcher(dist_name, LAM, L0).build(seqs)
+        got = m.query_longest(Q, eps)
+        want = brute_force_longest(get(dist_name), Q, seqs, LAM, L0, eps)
+        if want is None:
+            assert got is None
+        else:
+            assert got is not None
+            assert got.q_len == want.q_len
+            assert got.distance <= eps
+
+
+def test_type3_nearest_matches_brute_force():
+    for trial in range(4):
+        rng = np.random.default_rng(300 + trial)
+        Q, seqs = _plant_string_case(rng, mutate=(trial % 2 == 0))
+        m = SubsequenceMatcher("levenshtein", LAM, L0).build(seqs)
+        got = m.query_nearest(Q, eps_max=10.0)
+        want = brute_force_nearest(get("levenshtein"), Q, seqs, LAM, L0)
+        assert got is not None
+        assert got.distance == pytest.approx(want.distance, abs=1e-6)
+
+
+def test_dtw_routes_to_linear_scan_only():
+    Q, seqs = _plant_series_case(np.random.default_rng(5))
+    with pytest.raises(ValueError, match="not a metric"):
+        SubsequenceMatcher("dtw", LAM, L0, index="refnet")
+    m = SubsequenceMatcher("dtw", LAM, L0, index="linear").build(seqs)
+    res = m.query_range(Q, 0.5)
+    for p in res:
+        assert p.distance <= 0.5
+
+
+def test_filter_cost_is_linear_in_Q_and_X():
+    """Paper eq. (5): segment comparisons are O(|Q||X|), not O(|Q|^2|X|^2)."""
+    rng = np.random.default_rng(9)
+    seqs = [rng.integers(0, 8, size=(200,))]
+    Q = rng.integers(0, 8, size=(40,))
+    m = SubsequenceMatcher("levenshtein", LAM, L0, index="linear").build(seqs)
+    m.reset_counter()
+    m.segment_hits(Q, 1.0)
+    n_windows = len(seqs[0]) // (LAM // 2)
+    n_segments = sum(
+        len(s) for _, s in seg.query_segments(Q, LAM, L0).values())
+    assert m.eval_count == n_windows * n_segments
+    bound = 2 * (2 * L0 + 1) / LAM * len(seqs[0]) * len(Q)
+    assert m.eval_count <= bound * 1.1
+
+
+def test_index_reduces_filter_cost():
+    rng = np.random.default_rng(10)
+    base = rng.integers(0, 20, size=(600,))
+    seqs = [base]
+    Q = np.concatenate([base[100:110], rng.integers(0, 20, size=(10,))])
+    lin = SubsequenceMatcher("levenshtein", LAM, L0, index="linear").build(seqs)
+    net = SubsequenceMatcher("levenshtein", LAM, L0, index="refnet",
+                             tight_bounds=True).build(seqs)
+    lin.reset_counter(); net.reset_counter()
+    h1 = lin.segment_hits(Q, 1.0)
+    h2 = net.segment_hits(Q, 1.0)
+    assert {(h.segment, h.window_idx) for h in h1} == \
+        {(h.segment, h.window_idx) for h in h2}
+    assert net.eval_count < lin.eval_count
