@@ -9,6 +9,8 @@ import time
 import numpy as np
 
 from benchmarks.common import mutate_queries, row
+from repro.core.batch_engine import BatchEngine
+from repro.core.counter import CountedDistance
 from repro.core.distributed import device_range_query, flatten_net
 from repro.core.refnet import ReferenceNet
 from repro.data import synthetic
@@ -34,6 +36,26 @@ def run(full: bool = False):
             pivots=flat.n_pivots,
             hits=int(hits.sum()),
         ))
+    # batched frontier engine over the same net, jax-backend dispatches:
+    # plans are structure-only, so the host-built net drives the jitted
+    # Distance.batch wavefront with one dispatch per merged round
+    jcounter = CountedDistance(get("levenshtein"), data, backend="jax")
+    for eps in [1.0, 2.0, 4.0]:
+        jcounter.reset()
+        engine = BatchEngine(jcounter)
+        engine.run([net.range_query_plan(eps) for _ in qs], qs, eps)  # warm
+        jcounter.reset()
+        engine = BatchEngine(jcounter)
+        t0 = time.perf_counter()
+        engine.run([net.range_query_plan(eps) for _ in qs], qs, eps)
+        dt = (time.perf_counter() - t0) * 1e6 / len(qs)
+        out.append(row(
+            f"engine_jax_eps{eps}", dt,
+            evals_frac=round(jcounter.count / (len(qs) * n), 4),
+            dispatches=jcounter.dispatches,
+            rounds=engine.rounds,
+        ))
+
     # fleet: shards + resize
     fleet = ElasticIndex("levenshtein", data, [f"w{i}" for i in range(4)],
                          tight_bounds=True)

@@ -1,15 +1,29 @@
 """Paper Figs. 8-11 — range-query pruning: % distance computations vs the
 naive scan for RN / RN-5 / RN-tight / CT / MV-5 / MV-50 across range sizes,
-on PROTEINS (Levenshtein), SONGS (DFD), TRAJ (ERP + DFD)."""
+on PROTEINS (Levenshtein), SONGS (DFD), TRAJ (ERP + DFD).
+
+Each (eps, index) cell is measured twice:
+
+* host mode  — the classic per-query sequential traversal (one backend
+  dispatch per frontier of one query);
+* engine     — the batched frontier engine (``core/batch_engine.py``)
+  driving ALL queries' plans together, one ``Distance.batch`` dispatch per
+  merged round.
+
+Exact-evaluation counts are identical by construction (asserted); the
+``dispatches`` column shows the Python-level dispatch collapse and
+``speedup`` the resulting wall-clock ratio.  ``*_lb`` rows additionally
+enable the lower-bound cascade (pruned exact DPs; hit sets unchanged).
+"""
 
 from __future__ import annotations
 
 import time
-from typing import Dict
 
 import numpy as np
 
 from benchmarks.common import mutate_queries, row
+from repro.core.batch_engine import BatchEngine
 from repro.core.covertree import CoverTree
 from repro.core.refindex import MVReferenceIndex
 from repro.core.refnet import ReferenceNet
@@ -31,29 +45,65 @@ def _indices(dist_name, data, eps_prime):
     }
 
 
-def _sweep(name, dist_name, data, eps_prime, ranges, n_queries, out):
+def _sweep(name, dist_name, data, eps_prime, ranges, n_queries, out,
+           lb_labels=("rn_tight",)):
     idx = _indices(dist_name, data, eps_prime)
     qs = mutate_queries(data, n_queries, seed=2)
     N = len(data)
     for eps in ranges:
         base = None
         for label, net in idx.items():
+            # host mode: per-query sequential traversal
             net.counter.reset()
             t0 = time.perf_counter()
-            hits = 0
-            for q in qs:
-                res = net.range_query(q, eps)
-                hits += len(res)
-            dt = (time.perf_counter() - t0) * 1e6 / n_queries
-            frac = net.counter.count / (n_queries * N)
+            host_res = [net.range_query(q, eps) for q in qs]
+            host_dt = (time.perf_counter() - t0) * 1e6 / n_queries
+            host_evals, host_disp = net.counter.count, net.counter.dispatches
+            hits = sum(len(r) for r in host_res)
+            frac = host_evals / (n_queries * N)
             if base is None:
                 base = hits
             assert hits == base, f"{label} disagrees at eps={eps}"
             out.append(row(
-                f"{name}_eps{eps}_{label}", dt,
+                f"{name}_eps{eps}_{label}", host_dt,
                 evals_frac=round(frac, 4),
                 hits_per_query=round(hits / n_queries, 1),
+                dispatches=host_disp,
             ))
+
+            # batched frontier engine: all queries, one dispatch per round
+            net.counter.reset()
+            engine = BatchEngine(net.counter)
+            t0 = time.perf_counter()
+            eng_res = engine.run(
+                [net.range_query_plan(eps) for _ in qs], qs, eps)
+            eng_dt = (time.perf_counter() - t0) * 1e6 / n_queries
+            assert eng_res == host_res, f"{label} engine mismatch eps={eps}"
+            assert net.counter.count == host_evals, \
+                f"{label} engine eval-count drift eps={eps}"
+            out.append(row(
+                f"{name}_eps{eps}_{label}_engine", eng_dt,
+                evals_frac=round(frac, 4),
+                dispatches=net.counter.dispatches,
+                rounds=engine.rounds,
+                speedup=round(host_dt / max(eng_dt, 1e-9), 2),
+            ))
+
+            # LB cascade on top of the engine (subset: it changes counts)
+            if label in lb_labels:
+                net.counter.reset()
+                casc = BatchEngine(net.counter, lb_cascade=True)
+                t0 = time.perf_counter()
+                lb_res = casc.run(
+                    [net.range_query_plan(eps) for _ in qs], qs, eps)
+                lb_dt = (time.perf_counter() - t0) * 1e6 / n_queries
+                assert lb_res == host_res, f"{label} lb mismatch eps={eps}"
+                out.append(row(
+                    f"{name}_eps{eps}_{label}_engine_lb", lb_dt,
+                    evals_frac=round(net.counter.count / (n_queries * N), 4),
+                    lb_evals=net.counter.lb_count,
+                    speedup=round(host_dt / max(lb_dt, 1e-9), 2),
+                ))
 
 
 def run(full: bool = False):

@@ -1,0 +1,80 @@
+"""Warn-only benchmark regression gate.
+
+Compares a fresh ``reports/benchmarks.json`` against the checked-in
+baseline (``BENCH_query.json``) row-by-row (matched on ``name``) and emits
+GitHub Actions ``::warning::`` annotations for timing regressions and for
+any increase in the paper's exact-evaluation fraction.  Always exits 0 —
+the gate records the perf trajectory without blocking PRs (flip
+``--strict`` once the fleet of CI runners is quiet enough to trust).
+
+  python -m benchmarks.compare --baseline BENCH_query.json \
+      --report reports/benchmarks.json [--tolerance 1.5] [--strict]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _rows_by_name(rows):
+    return {r["name"]: r for r in rows if "name" in r}
+
+
+def compare(baseline_rows, report_rows, tolerance: float):
+    base = _rows_by_name(baseline_rows)
+    rep = _rows_by_name(report_rows)
+    warnings = []
+    compared = 0
+    for name, b in sorted(base.items()):
+        r = rep.get(name)
+        if r is None:
+            continue
+        compared += 1
+        b_us, r_us = float(b["us_per_call"]), float(r["us_per_call"])
+        if b_us > 0 and r_us > tolerance * b_us:
+            warnings.append(
+                f"{name}: {r_us:.1f}us vs baseline {b_us:.1f}us "
+                f"({r_us / b_us:.2f}x, tolerance {tolerance:.2f}x)")
+        for key in ("evals_frac", "dispatches"):
+            if key in b and key in r and float(r[key]) > float(b[key]) * 1.01:
+                warnings.append(
+                    f"{name}: {key} rose {b[key]} -> {r[key]} "
+                    "(pruning/batching regression)")
+    return compared, warnings
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_query.json")
+    ap.add_argument("--report", default="reports/benchmarks.json")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="allowed slowdown factor before warning")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on warnings (off: warn-only)")
+    args = ap.parse_args()
+
+    baseline_path = pathlib.Path(args.baseline)
+    report_path = pathlib.Path(args.report)
+    if not baseline_path.exists():
+        print(f"::warning::no baseline at {baseline_path}; skipping compare")
+        return 0
+    if not report_path.exists():
+        print(f"::warning::no report at {report_path}; skipping compare")
+        return 0
+    compared, warnings = compare(
+        json.loads(baseline_path.read_text()),
+        json.loads(report_path.read_text()),
+        args.tolerance)
+    print(f"# compared {compared} rows against {baseline_path}")
+    for w in warnings:
+        print(f"::warning::{w}")
+    if not warnings:
+        print("# no regressions beyond tolerance")
+    return 1 if (args.strict and warnings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

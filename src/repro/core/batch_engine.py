@@ -1,0 +1,173 @@
+"""Batched frontier-expansion engine for the step-4 hot path.
+
+The paper's range queries (Algorithm 3 and both baselines) are naturally
+round-structured: each round the index knows a *frontier* — the set of
+still-undecided candidates whose distances it needs next — and nothing
+about round k+1 depends on anything but the distances returned for round k.
+Pair-at-a-time host traversal throws that structure away; this module keeps
+it.
+
+Indexes describe a range query as a **plan**: a generator that
+
+* yields :class:`Frontier` batches of candidate window indices,
+* receives the corresponding ``(m,)`` float32 distances back via ``send``,
+* and returns the sorted hit list via ``StopIteration.value``.
+
+Two drivers consume plans:
+
+* :func:`drive` — sequential host mode, one dispatch per frontier.  Used by
+  every index's classic ``range_query``; evaluation order and counts are
+  bit-identical to the historical pair/level-at-a-time path.
+* :class:`BatchEngine` — runs *many* concurrent plans (all query segments
+  of one length bucket, §5: there are only ``2*lambda0 + 1`` buckets) in
+  lockstep rounds, folding every plan's current frontier into **one**
+  ``Distance.batch`` dispatch per round.  Because a bucket shares one
+  (Lx, Ly) shape, the fixed-shape Pallas wavefront kernel applies directly
+  (``CountedDistance(backend="pallas")``).
+
+Frontiers carry a ``kind``:
+
+* ``EXACT``   — the plan consumes the distance *value* (e.g. a reference
+  whose distance feeds Lemma-4 bound propagation); always evaluated.
+* ``VERDICT`` — the plan only consumes the ``<= eps`` verdict (leaf
+  membership checks, linear-scan rows, MV survivors).  With the LB cascade
+  enabled, a cheap provable lower bound (``distances/bounds.py``) runs
+  first and candidates with ``lb > eps`` skip the exact O(l^2) DP entirely;
+  the bound value is returned in place of the distance, which preserves the
+  verdict because ``lb <= delta``.  With the cascade off (default), engine
+  results — hit sets AND exact-evaluation counts — are identical to host
+  mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Generator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.counter import CountedDistance
+
+EXACT = "exact"
+VERDICT = "verdict"
+
+#: yields Frontier, receives (m,) float32 distances, returns List[int] hits
+Plan = Generator
+
+
+@dataclasses.dataclass
+class Frontier:
+    """One round of undecided candidates of a single range-query plan."""
+    idxs: np.ndarray
+    kind: str = EXACT
+
+    def __post_init__(self):
+        self.idxs = np.asarray(self.idxs, np.int64)
+
+
+def drive(plan: Plan, counter: CountedDistance, q: np.ndarray,
+          q_len: Optional[int] = None, *, eps: Optional[float] = None,
+          lb_cascade: bool = False) -> List[int]:
+    """Sequential host-mode driver: one backend dispatch per frontier."""
+    q = np.asarray(q)
+    qlen = len(q) if q_len is None else int(q_len)
+    try:
+        fr = next(plan)
+        while True:
+            idxs = fr.idxs
+            if lb_cascade and eps is not None and fr.kind == VERDICT:
+                qs = np.repeat(q[None, :qlen], idxs.size, 0)
+                ds = _cascade(counter, qs, idxs, qlen, eps)
+            else:
+                ds = counter.eval(q, idxs, qlen)
+            fr = plan.send(ds)
+    except StopIteration as stop:
+        return stop.value if stop.value is not None else []
+
+
+def _cascade(counter: CountedDistance, qs: np.ndarray, idxs: np.ndarray,
+             q_len: int, eps: float) -> np.ndarray:
+    """LB-filter verdict rows, exact-evaluate only the survivors.
+
+    Returns per-row values whose ``<= eps`` verdict equals the exact one:
+    survivors get their exact distance, pruned rows their lower bound
+    (``lb <= delta`` and ``lb > eps`` together imply ``delta > eps``).
+    """
+    lbs = counter.lower_bounds(qs, idxs, q_len)
+    if lbs is None:
+        return counter.eval_stacked(qs, idxs, q_len)
+    out = lbs.astype(np.float32, copy=True)
+    keep = lbs <= eps
+    if keep.any():
+        out[keep] = counter.eval_stacked(qs[keep], idxs[keep], q_len)
+    return out
+
+
+class BatchEngine:
+    """Run many concurrent range-query plans, one dispatch per round.
+
+    All plans in a call share one query length (the matching layer invokes
+    the engine once per segment-length bucket), so every merged round is a
+    single fixed-shape ``Distance.batch`` dispatch regardless of how many
+    segments, levels, or candidate lists contributed to it.
+    """
+
+    def __init__(self, counter: CountedDistance, *, lb_cascade: bool = False):
+        self.counter = counter
+        self.lb_cascade = lb_cascade
+        self.rounds = 0  # merged frontier rounds (diagnostics / benchmarks)
+
+    def run(self, plans: Sequence[Plan], queries: np.ndarray,
+            eps: float, q_len: Optional[int] = None) -> List[List[int]]:
+        """Drive ``plans[i]`` with query row ``queries[i]``; returns hits per
+        plan.  Hit sets and exact-eval counts match sequential host mode."""
+        queries = np.asarray(queries)
+        assert len(plans) == len(queries), "one query row per plan"
+        qlen = queries.shape[1] if q_len is None else int(q_len)
+        results: List[Optional[List[int]]] = [None] * len(plans)
+
+        state = {}
+        for i, p in enumerate(plans):
+            try:
+                state[i] = next(p)
+            except StopIteration as stop:
+                results[i] = stop.value if stop.value is not None else []
+
+        while state:
+            order = sorted(state)
+            sizes = [state[i].idxs.size for i in order]
+            cand = np.concatenate([state[i].idxs for i in order]) \
+                if sizes else np.zeros((0,), np.int64)
+            rows = np.concatenate(
+                [np.full(m, i, np.int64) for i, m in zip(order, sizes)]) \
+                if sizes else np.zeros((0,), np.int64)
+            verdict = np.concatenate(
+                [np.full(m, state[i].kind == VERDICT)
+                 for i, m in zip(order, sizes)]) \
+                if sizes else np.zeros((0,), bool)
+
+            ds = np.zeros(cand.size, np.float32)
+            exact = np.ones(cand.size, bool)
+            if self.lb_cascade and verdict.any():
+                lbs = self.counter.lower_bounds(
+                    queries[rows[verdict]], cand[verdict], qlen)
+                if lbs is not None:
+                    pruned = lbs > eps
+                    ds[np.flatnonzero(verdict)[pruned]] = lbs[pruned]
+                    exact[np.flatnonzero(verdict)[pruned]] = False
+            if exact.any():
+                # the ONE exact dispatch of this round, whole bucket at once
+                ds[exact] = self.counter.eval_stacked(
+                    queries[rows[exact]], cand[exact], qlen)
+            self.rounds += 1
+
+            new_state = {}
+            off = 0
+            for i, m in zip(order, sizes):
+                try:
+                    new_state[i] = plans[i].send(ds[off:off + m])
+                except StopIteration as stop:
+                    results[i] = stop.value if stop.value is not None else []
+                off += m
+            state = new_state
+        return results  # type: ignore[return-value]

@@ -1,35 +1,137 @@
 """Counted, batched distance evaluation over a window database.
 
-The paper's evaluation currency (§8.2) is the number of distance
+The paper's evaluation currency (§8.2) is the number of *exact* distance
 computations relative to a naive linear scan; every index implementation
 funnels its evaluations through :class:`CountedDistance` so the counts are
-exact and comparable.  Host-mode traversal uses the numpy wavefront backend
-(sequential small batches — dispatch-bound on CPU); the device path in
-``core/distributed.py`` uses the Pallas kernels instead.
+exact and comparable.  Batch-aware accounting separates three quantities:
+
+* ``count``      — exact O(l^2) DP evaluations (the paper's currency);
+* ``dispatches`` — Python-level backend invocations.  The frontier engine
+  (``core/batch_engine.py``) folds an entire round of candidates — across
+  every concurrent query of a length bucket — into **one** dispatch, which
+  is where the wall-clock win over pair-at-a-time traversal comes from;
+* ``lb_count``   — cheap lower-bound evaluations spent by the optional LB
+  cascade (never mixed into ``count``, so paper pruning ratios stay
+  comparable).
+
+Backends (per-round batches are shape-bucketed, so all three see static
+shapes):
+
+* ``numpy``  — the anti-diagonal wavefront in numpy; best for the small
+  sequential batches of host-mode traversal (no device dispatch overhead);
+* ``jax``    — the registry's jitted ``Distance.batch`` wavefront engine;
+* ``pallas`` — the fixed-shape Pallas wavefront kernel
+  (``kernels/ops.wavefront``), interpret-mode off-TPU.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.distances import base as dist_base
 from repro.distances import np_backend
 
+BACKENDS = ("numpy", "jax", "pallas")
+
+#: registry name -> Pallas wavefront mode (kernels/ops.py)
+_PALLAS_MODE = {"dtw": "dtw", "erp": "erp", "frechet": "dfd",
+                "levenshtein": "lev"}
+
+
+def _pad_pow2(n: int) -> int:
+    """Next power of two >= n — caps jit recompilations across round sizes."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
+    """A ``(xs, ys, lx, ly) -> (B,) np.ndarray`` batch function."""
+    if backend == "numpy":
+        return np_backend.batch_for(dist.name)
+    if backend == "jax":
+        import jax.numpy as jnp
+
+        def jax_batch(xs, ys, lx=None, ly=None):
+            xs, ys = np.asarray(xs), np.asarray(ys)
+            L = max(xs.shape[1], ys.shape[1])
+
+            def pad_len(a):
+                if a.shape[1] == L:
+                    return a
+                w = [(0, 0), (0, L - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
+                return np.pad(a, w)
+
+            lx = np.full(len(xs), xs.shape[1]) if lx is None else np.asarray(lx)
+            ly = np.full(len(ys), ys.shape[1]) if ly is None else np.asarray(ly)
+            B = len(xs)
+            P = _pad_pow2(B)
+            xs, ys = pad_len(xs), pad_len(ys)
+            if P != B:  # pad batch with row 0 so shapes recompile rarely
+                pad = P - B
+                xs = np.concatenate([xs, xs[:1].repeat(pad, 0)])
+                ys = np.concatenate([ys, ys[:1].repeat(pad, 0)])
+                lx = np.concatenate([lx, lx[:1].repeat(pad)])
+                ly = np.concatenate([ly, ly[:1].repeat(pad)])
+            out = np.asarray(dist.batch(xs, ys, jnp.asarray(lx),
+                                        jnp.asarray(ly)))
+            return out[:B]
+
+        return jax_batch
+    if backend == "pallas":
+        mode = _PALLAS_MODE.get(dist.name)
+        if mode is None:  # euclidean / hamming: no wavefront; numpy is exact
+            return np_backend.batch_for(dist.name)
+        from repro.kernels import ops
+
+        def pallas_batch(xs, ys, lx=None, ly=None):
+            xs, ys = np.asarray(xs), np.asarray(ys)
+            # fixed-shape kernel: the engine buckets by length, so every row
+            # of a dispatch shares one (Lx, Ly)
+            if lx is not None:
+                lx = np.asarray(lx)
+                assert lx.size == 0 or (lx == lx[0]).all(), \
+                    "pallas backend requires a single length bucket per dispatch"
+                if lx.size:
+                    xs = xs[:, : int(lx[0])]
+            if ly is not None:
+                ly = np.asarray(ly)
+                assert ly.size == 0 or (ly == ly[0]).all(), \
+                    "pallas backend requires a single length bucket per dispatch"
+                if ly.size:
+                    ys = ys[:, : int(ly[0])]
+            B = len(xs)
+            P = _pad_pow2(max(B, 8))
+            if P != B:
+                xs = np.concatenate([xs, xs[:1].repeat(P - B, 0)])
+                ys = np.concatenate([ys, ys[:1].repeat(P - B, 0)])
+            return np.asarray(ops.wavefront(xs, ys, mode))[:B]
+
+        return pallas_batch
+    raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+
 
 class CountedDistance:
-    """Batched distances from one query object to indexed database windows."""
+    """Batched distances from query objects to indexed database windows."""
 
-    def __init__(self, dist: dist_base.Distance, data: np.ndarray):
+    def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
+                 backend: str = "numpy"):
         self.dist = dist
         self.data = np.asarray(data)
         self.n = len(self.data)
-        self._batch = np_backend.batch_for(dist.name)
-        self.count = 0
+        self.backend = backend
+        self._batch = _resolve_backend(dist, backend)
+        self.count = 0       # exact evaluations (paper currency)
+        self.dispatches = 0  # Python-level backend dispatches
+        self.lb_count = 0    # cheap lower-bound evaluations (LB cascade)
 
     def reset(self) -> None:
         self.count = 0
+        self.dispatches = 0
+        self.lb_count = 0
 
     def eval(self, q: np.ndarray, idxs: Sequence[int],
              q_len: Optional[int] = None) -> np.ndarray:
@@ -37,19 +139,55 @@ class CountedDistance:
         idxs = np.asarray(idxs, np.int64)
         if idxs.size == 0:
             return np.zeros((0,), np.float32)
-        self.count += int(idxs.size)
-        ys = self.data[idxs]
         q = np.asarray(q)
-        L = ys.shape[1]
         qlen = len(q) if q_len is None else q_len
+        qs = np.repeat(q[None, :qlen], idxs.size, 0)
+        return self.eval_stacked(qs, idxs, qlen)
+
+    def eval_stacked(self, qs: np.ndarray, idxs: Sequence[int],
+                     q_len: Optional[int] = None) -> np.ndarray:
+        """delta(qs[i], data[idxs[i]]) row-wise in ONE backend dispatch.
+
+        ``qs`` holds one (possibly repeated) query row per candidate — the
+        frontier engine concatenates every concurrent query's round into a
+        single call here, so dispatches scale with rounds, not candidates.
+        """
+        idxs = np.asarray(idxs, np.int64)
+        if idxs.size == 0:
+            return np.zeros((0,), np.float32)
+        qs = np.asarray(qs)
+        ys = self.data[idxs]
+        L = ys.shape[1]
+        qlen = qs.shape[1] if q_len is None else int(q_len)
         if not self.dist.variable_length and qlen != L:
             raise ValueError(
                 f"{self.dist.name} requires equal lengths ({qlen} != {L})")
-        # The numpy wavefront backend supports rectangular (Lx != Ly) tiles.
-        xs = np.repeat(q[None, :qlen], len(ys), 0)
+        self.count += int(idxs.size)
+        self.dispatches += 1
+        # Rectangular (Lx != Ly) tiles are supported by all backends.
+        xs = qs[:, :qlen]
         lx = np.full(len(ys), qlen)
         ly = np.full(len(ys), L)
         return np.asarray(self._batch(xs, ys, lx, ly), np.float32)
+
+    def lower_bounds(self, qs: np.ndarray, idxs: Sequence[int],
+                     q_len: Optional[int] = None) -> Optional[np.ndarray]:
+        """Cheap row-wise lower bounds, or None when the distance has none.
+
+        Counted in ``lb_count`` only — never in ``count``."""
+        lb = self.dist.lower_bound
+        if lb is None:
+            return None
+        idxs = np.asarray(idxs, np.int64)
+        if idxs.size == 0:
+            return np.zeros((0,), np.float32)
+        qs = np.asarray(qs)
+        ys = self.data[idxs]
+        qlen = qs.shape[1] if q_len is None else int(q_len)
+        self.lb_count += int(idxs.size)
+        lx = np.full(len(ys), qlen)
+        ly = np.full(len(ys), ys.shape[1])
+        return np.asarray(lb(qs[:, :qlen], ys, lx, ly), np.float32)
 
     def pairwise(self, i: int, idxs: Sequence[int]) -> np.ndarray:
         """delta(data[i], data[j]) for j in idxs (used at build time)."""

@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import batch_engine
 from repro.core import segmentation as seg
 from repro.core.counter import CountedDistance
 from repro.core.covertree import CoverTree
@@ -69,9 +70,16 @@ class LinearScanIndex:
     def build(self):
         return self
 
-    def range_query(self, q, eps, q_len=None) -> List[int]:
-        ds = self.counter.eval(q, np.arange(len(self.data)), q_len)
-        return sorted(int(i) for i in np.nonzero(ds <= eps)[0])
+    def range_query(self, q, eps, q_len=None, *,
+                    lb_cascade: bool = False) -> List[int]:
+        return batch_engine.drive(self.range_query_plan(eps), self.counter,
+                                  q, q_len, eps=eps, lb_cascade=lb_cascade)
+
+    def range_query_plan(self, eps: float) -> batch_engine.Plan:
+        """Single verdict frontier over the whole database."""
+        ds = yield batch_engine.Frontier(np.arange(len(self.data)),
+                                         batch_engine.VERDICT)
+        return sorted(int(i) for i in np.nonzero(np.asarray(ds) <= eps)[0])
 
 
 INDEXES = {
@@ -86,7 +94,8 @@ class SubsequenceMatcher:
     def __init__(self, dist_name: str, lam: int, lambda0: int = 1, *,
                  index: str = "refnet", eps_prime: float = 1.0,
                  num_max: Optional[int] = None, tight_bounds: bool = False,
-                 mv_refs: int = 5):
+                 mv_refs: int = 5, backend: str = "numpy",
+                 lb_cascade: bool = False, batched: bool = True):
         self.dist = dist_base.require_consistent(dist_name)
         if index != "linear":
             dist_base.require_metric(dist_name)
@@ -94,6 +103,9 @@ class SubsequenceMatcher:
         self.lambda0 = lambda0
         self.l = seg.window_length(lam)
         self.index_kind = index
+        self.backend = backend
+        self.lb_cascade = lb_cascade
+        self.batched = batched  # False = legacy per-segment host traversal
         self.index_kwargs: Dict = {}
         if index in ("refnet", "covertree"):
             self.index_kwargs = dict(eps_prime=eps_prime)
@@ -106,6 +118,7 @@ class SubsequenceMatcher:
         self.windows: Optional[np.ndarray] = None
         self.meta: List[seg.Window] = []
         self.index = None
+        self.engine: Optional[batch_engine.BatchEngine] = None
         self._verify_batch = None
 
     # -- steps 1-2 (offline) -------------------------------------------------
@@ -113,8 +126,13 @@ class SubsequenceMatcher:
     def build(self, seqs: Sequence[np.ndarray]) -> "SubsequenceMatcher":
         self.seqs = [np.asarray(x) for x in seqs]
         self.windows, self.meta = seg.partition_windows(self.seqs, self.lam)
+        counter = CountedDistance(self.dist, self.windows,
+                                  backend=self.backend)
         cls = INDEXES[self.index_kind]
-        self.index = cls(self.dist, self.windows, **self.index_kwargs).build()
+        self.index = cls(self.dist, self.windows, counter=counter,
+                         **self.index_kwargs).build()
+        self.engine = batch_engine.BatchEngine(self.index.counter,
+                                               lb_cascade=self.lb_cascade)
         self._verify_batch = np_backend.batch_for(self.dist.name)
         return self
 
@@ -122,18 +140,37 @@ class SubsequenceMatcher:
     def eval_count(self) -> int:
         return self.index.counter.count
 
+    @property
+    def dispatch_count(self) -> int:
+        return self.index.counter.dispatches
+
     def reset_counter(self) -> None:
         self.index.counter.reset()
 
     # -- steps 3-4 (online filter) --------------------------------------------
 
     def segment_hits(self, Q: np.ndarray, eps: float) -> List[SegmentHit]:
+        """Step 4: range-query every segment against the window index.
+
+        Batched mode drives all segments of one length bucket through the
+        frontier engine together — one ``Distance.batch`` dispatch per
+        frontier round per bucket instead of one per (segment, candidate
+        list).  Hit sets and exact-eval counts are identical to the legacy
+        per-segment loop (property-tested in tests/test_batch_engine.py).
+        """
         Q = np.asarray(Q)
         hits: List[SegmentHit] = []
         for ln, (arr, segs) in seg.query_segments(
                 Q, self.lam, self.lambda0).items():
-            for a, s in zip(arr, segs):
-                for w in self.index.range_query(a, eps, q_len=ln):
+            if self.batched:
+                plans = [self.index.range_query_plan(eps) for _ in segs]
+                per_seg = self.engine.run(plans, arr, eps, q_len=ln)
+            else:
+                per_seg = [self.index.range_query(
+                    a, eps, q_len=ln, lb_cascade=self.lb_cascade)
+                    for a in arr]
+            for s, wins in zip(segs, per_seg):
+                for w in wins:
                     hits.append(SegmentHit(
                         segment=s, window_idx=int(w), window=self.meta[w],
                         distance=math.nan))

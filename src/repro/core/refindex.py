@@ -17,6 +17,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core import batch_engine
 from repro.core.counter import CountedDistance
 from repro.distances import base as dist_base
 
@@ -71,15 +72,23 @@ class MVReferenceIndex:
         return self
 
     def range_query(self, q: np.ndarray, eps: float,
-                    q_len: Optional[int] = None) -> List[int]:
+                    q_len: Optional[int] = None, *,
+                    lb_cascade: bool = False) -> List[int]:
+        return batch_engine.drive(self.range_query_plan(eps), self.counter,
+                                  q, q_len, eps=eps, lb_cascade=lb_cascade)
+
+    def range_query_plan(self, eps: float) -> batch_engine.Plan:
+        """Two-frontier plan: reference row (exact, feeds the triangle-
+        inequality table pruning), then the survivors (verdict only)."""
         assert self.table is not None, "call build() first"
-        dq = self.counter.eval(q, self.refs, q_len)  # k evals
-        lower = np.max(np.abs(dq[:, None] - self.table), axis=0)
+        dq = yield batch_engine.Frontier(np.asarray(self.refs, np.int64),
+                                         batch_engine.EXACT)  # k evals
+        lower = np.max(np.abs(np.asarray(dq)[:, None] - self.table), axis=0)
         surv = np.nonzero(lower <= eps)[0]
         if surv.size == 0:
             return []
-        dd = self.counter.eval(q, surv, q_len)
-        return sorted(int(i) for i in surv[dd <= eps])
+        dd = yield batch_engine.Frontier(surv, batch_engine.VERDICT)
+        return sorted(int(i) for i in surv[np.asarray(dd) <= eps])
 
     def stats(self) -> dict:
         return {

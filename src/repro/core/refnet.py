@@ -46,6 +46,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core import batch_engine
 from repro.core.counter import CountedDistance
 from repro.distances import base as dist_base
 
@@ -242,8 +243,21 @@ class ReferenceNet:
     # -- range query (Alg. 3 as bound propagation) ---------------------------
 
     def range_query(self, q: np.ndarray, eps: float,
-                    q_len: Optional[int] = None) -> List[int]:
-        """All object idxs X with delta(q, X) <= eps."""
+                    q_len: Optional[int] = None, *,
+                    lb_cascade: bool = False) -> List[int]:
+        """All object idxs X with delta(q, X) <= eps (host-mode driver)."""
+        return batch_engine.drive(self.range_query_plan(eps), self.counter,
+                                  q, q_len, eps=eps, lb_cascade=lb_cascade)
+
+    def range_query_plan(self, eps: float) -> batch_engine.Plan:
+        """Algorithm 3 as a frontier generator (see ``core/batch_engine.py``).
+
+        Yields batches of undecided candidates, receives their distances,
+        returns the sorted hit list.  The frontier sequence — and therefore
+        the exact-evaluation count — is identical to the classic host path;
+        only *who* evaluates a frontier (sequential driver vs the batched
+        engine merging many plans per round) changes.
+        """
         if self.root is None:
             return []
         known: Dict[int, float] = {}   # exact distances (each counted once)
@@ -255,10 +269,12 @@ class ReferenceNet:
         decided: Set[int] = set()      # object verdict settled
         results: List[int] = []
 
-        def eval_batch(idxs: List[int]) -> None:
+        def request(idxs, kind):
+            # de-dup against known, then yield ONE frontier for the batch
             new = sorted(set(i for i in idxs if i not in known))
             if new:
-                ds = self.counter.eval(q, new, q_len)
+                ds = yield batch_engine.Frontier(np.asarray(new, np.int64),
+                                                 kind)
                 known.update(zip(new, map(float, ds)))
 
         def settle_subtree(n: int, accept: bool) -> None:
@@ -281,18 +297,19 @@ class ReferenceNet:
             if inside:
                 results.append(x)
 
-        eval_batch([self.root])
+        yield from request([self.root], batch_engine.EXACT)
         d_root = known[self.root]
         decide(self.root, d_root <= eps)
         alive: Set[int] = {self.root}
         pending_leaf: Set[int] = set()     # objects awaiting final verdict
 
         for level in range(self.top_level, -1, -1):
-            # evaluate deferred expandable children whose level is reached
+            # evaluate deferred expandable children whose level is reached;
+            # exact values feed Lemma-4 bound propagation below
             defer = [c for c in alive
                      if c not in known and c not in closed
                      and self.nodes[c].level == level]
-            eval_batch(defer)
+            yield from request(defer, batch_engine.EXACT)
             for c in defer:
                 d = known[c]
                 decide(c, d <= eps)
@@ -342,9 +359,10 @@ class ReferenceNet:
                         pending_leaf.add(c)
                 closed.add(n)
 
-        # final object verdicts for leaves no parent managed to decide free
+        # final object verdicts for leaves no parent managed to decide free;
+        # only the <= eps verdict is consumed, so the LB cascade may prune
         rem = [c for c in pending_leaf if c not in decided and c not in closed]
-        eval_batch(rem)
+        yield from request(rem, batch_engine.VERDICT)
         for c in rem:
             decide(c, known[c] <= eps)
         return sorted(results)

@@ -22,6 +22,11 @@ Batched signatures (the only ones used on the hot path):
 * ``pair(x, y, len_x=None, len_y=None)``            -> scalar
 * ``batch(xs, ys, len_x=None, len_y=None)``          -> (B,)   paired
 * ``matrix(xs, ys, len_x=None, len_y=None)``         -> (M, N) all pairs
+
+Alignment distances may additionally register a cheap numpy ``lower_bound``
+with the ``batch`` signature (``distances/bounds.py``); the frontier engine
+uses it to skip exact O(l^2) DPs for candidates whose bound already exceeds
+the query radius.
 """
 
 from __future__ import annotations
@@ -50,6 +55,9 @@ class Distance:
     #: supports unequal lengths (alignment-based distances)
     variable_length: bool
     doc: str = ""
+    #: optional vectorized numpy lower bound, row-wise <= batch(...); used by
+    #: the batch engine's LB cascade.  None = no cheap bound available.
+    lower_bound: Optional[Callable] = None
 
     def pair(self, x, y, len_x=None, len_y=None):
         x = jnp.asarray(x)

@@ -1,0 +1,84 @@
+"""Cheap, provable lower bounds for the batch engine's LB cascade.
+
+Each function is vectorized numpy over row-paired batches and satisfies
+``lb(x, y) <= delta(x, y)`` row-wise, so pruning a candidate whose bound
+already exceeds eps can never change a range-query verdict — only skip its
+exact O(l^2) DP.  Bounds cost O(B*l) (ERP) or O(B) (the rest), i.e. they
+are free next to a single wavefront evaluation.
+
+The bounds (Keogh-style endpoint/accumulation arguments):
+
+* DTW — every warping path aligns (1,1) and (lx,ly); both cells carry
+  nonnegative cost and are distinct whenever lx+ly > 2, so the sum of the
+  two endpoint costs lower-bounds the path sum (LB_Kim first/last).
+* DFD — the Frechet value is the *max* over an aligning path through the
+  same two mandatory cells, so the larger endpoint cost is a bound.
+* ERP — with gap element g = 0, ERP(x, y) >= | sum_i |x_i| - sum_j |y_j| |
+  (Chen & Ng, VLDB'04): every edit script pays at least the difference of
+  total gap masses.
+* Levenshtein — at least |lx - ly| insertions/deletions are unavoidable.
+
+Signature: ``(xs, ys, len_x, len_y) -> (B,)`` with ``xs: (B, Lx[, d])``,
+``ys: (B, Ly[, d])`` and integer length vectors (rows may be padded).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _as3d(a: np.ndarray) -> np.ndarray:
+    a = np.asarray(a, np.float32)
+    return a[..., None] if a.ndim == 2 else a
+
+
+def _row_norm(a: np.ndarray) -> np.ndarray:
+    """(B, L, d) -> (B, L) elementwise L2 magnitudes."""
+    return np.sqrt(np.maximum(np.sum(a * a, axis=-1), 0.0))
+
+
+def _endpoint_costs(xs, ys, len_x, len_y):
+    """Costs of the two mandatory alignment cells (1,1) and (lx,ly)."""
+    xs, ys = _as3d(xs), _as3d(ys)
+    lx = np.asarray(len_x, np.int64)
+    ly = np.asarray(len_y, np.int64)
+    r = np.arange(len(xs))
+    c_first = _row_norm(xs[:, 0] - ys[:, 0])  # (B, d) -> (B,)
+    c_last = _row_norm(xs[r, lx - 1] - ys[r, ly - 1])
+    return c_first, c_last, lx, ly
+
+
+def lb_dtw(xs, ys, len_x=None, len_y=None) -> np.ndarray:
+    xs, ys = _as3d(xs), _as3d(ys)
+    len_x = np.full(len(xs), xs.shape[1]) if len_x is None else len_x
+    len_y = np.full(len(ys), ys.shape[1]) if len_y is None else len_y
+    c0, ce, lx, ly = _endpoint_costs(xs, ys, len_x, len_y)
+    return np.where(lx + ly > 2, c0 + ce, c0).astype(np.float32)
+
+
+def lb_frechet(xs, ys, len_x=None, len_y=None) -> np.ndarray:
+    xs, ys = _as3d(xs), _as3d(ys)
+    len_x = np.full(len(xs), xs.shape[1]) if len_x is None else len_x
+    len_y = np.full(len(ys), ys.shape[1]) if len_y is None else len_y
+    c0, ce, _, _ = _endpoint_costs(xs, ys, len_x, len_y)
+    return np.maximum(c0, ce).astype(np.float32)
+
+
+def lb_erp(xs, ys, len_x=None, len_y=None) -> np.ndarray:
+    xs, ys = _as3d(xs), _as3d(ys)
+    lx = np.full(len(xs), xs.shape[1]) if len_x is None else np.asarray(len_x)
+    ly = np.full(len(ys), ys.shape[1]) if len_y is None else np.asarray(len_y)
+    gx = _row_norm(xs)
+    gy = _row_norm(ys)
+    mx = np.arange(xs.shape[1])[None, :] < lx[:, None]
+    my = np.arange(ys.shape[1])[None, :] < ly[:, None]
+    sx = np.sum(np.where(mx, gx, 0.0), axis=1)
+    sy = np.sum(np.where(my, gy, 0.0), axis=1)
+    return np.abs(sx - sy).astype(np.float32)
+
+
+def lb_levenshtein(xs, ys, len_x=None, len_y=None) -> np.ndarray:
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    lx = np.full(len(xs), xs.shape[1]) if len_x is None else np.asarray(len_x)
+    ly = np.full(len(ys), ys.shape[1]) if len_y is None else np.asarray(len_y)
+    return np.abs(lx - ly).astype(np.float32)

@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.distances import base
+from repro.distances import base, bounds
 from repro.distances._wavefront import (
     BIG, default_lengths, l2_cost, matrixify, wavefront_dp)
 
@@ -43,4 +43,5 @@ dtw = base.register(base.Distance(
     string=False,
     variable_length=True,
     doc="Dynamic Time Warping; element cost = Euclidean",
+    lower_bound=bounds.lb_dtw,
 ))

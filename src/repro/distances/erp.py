@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.distances import base
+from repro.distances import base, bounds
 from repro.distances._wavefront import (
     default_lengths, l2_cost, matrixify, wavefront_dp)
 
@@ -53,4 +53,5 @@ erp = base.register(base.Distance(
     string=False,
     variable_length=True,
     doc="Edit distance with Real Penalty; gap element g = 0; metric",
+    lower_bound=bounds.lb_erp,
 ))

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.distances import base
+from repro.distances import base, bounds
 from repro.distances._wavefront import (
     BIG, default_lengths, l2_cost, matrixify, wavefront_dp)
 
@@ -40,4 +40,5 @@ frechet = base.register(base.Distance(
     string=False,
     variable_length=True,
     doc="Discrete Frechet distance (DFD); metric",
+    lower_bound=bounds.lb_frechet,
 ))

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.distances import base
+from repro.distances import base, bounds
 from repro.distances._wavefront import (
     default_lengths, matrixify, neq_cost, wavefront_dp)
 
@@ -39,4 +39,5 @@ levenshtein = base.register(base.Distance(
     string=True,
     variable_length=True,
     doc="Levenshtein / edit distance over token ids; metric",
+    lower_bound=bounds.lb_levenshtein,
 ))

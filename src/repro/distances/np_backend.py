@@ -140,3 +140,24 @@ def batch_for(name: str):
         return lambda xs, ys, lx=None, ly=None: batch_alignment(
             xs, ys, mode, lx, ly)
     raise KeyError(name)
+
+
+def matrix_for(name: str):
+    """Numpy all-pairs function with the registry ``matrix`` signature.
+
+    Completes host-side parity with ``Distance.batch``/``Distance.matrix``:
+    (M, Lx[, d]) x (N, Ly[, d]) -> (M, N), realized by tiling into one
+    paired batch so the wavefront runs once over all M*N cells.
+    """
+    batch = batch_for(name)
+
+    def matrix(xs, ys, len_x=None, len_y=None):
+        xs, ys = np.asarray(xs), np.asarray(ys)
+        M, N = len(xs), len(ys)
+        xt = np.repeat(xs, N, axis=0)
+        yt = np.tile(ys, (M,) + (1,) * (ys.ndim - 1))
+        lx = None if len_x is None else np.repeat(np.asarray(len_x), N)
+        ly = None if len_y is None else np.tile(np.asarray(len_y), M)
+        return batch(xt, yt, lx, ly).reshape(M, N)
+
+    return matrix

@@ -35,6 +35,25 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas only — inline types like
+    ``f32[64,128]{1,0}`` carry commas inside brackets/braces."""
+    out, buf, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(buf).strip())
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        out.append("".join(buf).strip())
+    return out
+
+
 def _shape_of(type_str: str) -> Tuple[Tuple[int, ...], int]:
     m = _SHAPE_RE.match(type_str.strip())
     if not m:
@@ -112,7 +131,7 @@ def parse_hlo_costs(hlo: str) -> Dict:
             # dot costs
             dm = re.search(r"\bdot\(([^)]*)\)", rhs)
             if dm:
-                ops = [o.strip() for o in dm.group(1).split(",")]
+                ops = _split_operands(dm.group(1))
                 op_types = []
                 for o in ops[:2]:
                     o = o.lstrip("%")
@@ -155,7 +174,7 @@ def parse_hlo_costs(hlo: str) -> Dict:
                                 break
                         buf.append(ch)
                     inner = "".join(buf)
-                    ops = [o.strip().lstrip("%") for o in inner.split(",")]
+                    ops = [o.lstrip("%") for o in _split_operands(inner)]
                     nb = 0
                     for o in ops:
                         key = o.split()[-1].lstrip("%") if o else ""

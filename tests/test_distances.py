@@ -3,7 +3,12 @@ metric axioms, and the paper's consistency property (Def. 1)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip, deterministic ones still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core.consistency import check_consistency
 from repro.distances import base, get, names
@@ -116,37 +121,48 @@ def test_variable_length_padding_invariance(name):
 
 
 # --- hypothesis property tests -------------------------------------------
+# Skipped (not failed) when hypothesis is absent; CI installs the dev extra
+# so the full property suite runs there.
 
-@st.composite
-def _string_pair(draw):
-    lq = draw(st.integers(2, 7))
-    lx = draw(st.integers(2, 7))
-    q = draw(st.lists(st.integers(0, 3), min_size=lq, max_size=lq))
-    x = draw(st.lists(st.integers(0, 3), min_size=lx, max_size=lx))
-    return np.array(q), np.array(x)
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _string_pair(draw):
+        lq = draw(st.integers(2, 7))
+        lx = draw(st.integers(2, 7))
+        q = draw(st.lists(st.integers(0, 3), min_size=lq, max_size=lq))
+        x = draw(st.lists(st.integers(0, 3), min_size=lx, max_size=lx))
+        return np.array(q), np.array(x)
 
+    @settings(max_examples=25, deadline=None)
+    @given(_string_pair())
+    def test_consistency_property_levenshtein(pair):
+        """Paper Def. 1 holds for Levenshtein on arbitrary short strings."""
+        q, x = pair
+        assert check_consistency(get("levenshtein"), q, x)
 
-@settings(max_examples=25, deadline=None)
-@given(_string_pair())
-def test_consistency_property_levenshtein(pair):
-    """Paper Def. 1 holds for Levenshtein on arbitrary short strings."""
-    q, x = pair
-    assert check_consistency(get("levenshtein"), q, x)
+    @st.composite
+    def _series_pair(draw):
+        lq = draw(st.integers(2, 6))
+        lx = draw(st.integers(2, 6))
+        q = draw(st.lists(st.floats(-3, 3, width=32),
+                          min_size=lq * 2, max_size=lq * 2))
+        x = draw(st.lists(st.floats(-3, 3, width=32),
+                          min_size=lx * 2, max_size=lx * 2))
+        return (np.array(q, np.float32).reshape(lq, 2),
+                np.array(x, np.float32).reshape(lx, 2))
 
+    @settings(max_examples=15, deadline=None)
+    @given(_series_pair())
+    @pytest.mark.parametrize("name", ["erp", "frechet", "dtw"])
+    def test_consistency_property_timeseries(name, pair):
+        q, x = pair
+        assert check_consistency(get(name), q, x)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[dev])")
+    def test_consistency_property_levenshtein():
+        pass
 
-@st.composite
-def _series_pair(draw):
-    lq = draw(st.integers(2, 6))
-    lx = draw(st.integers(2, 6))
-    q = draw(st.lists(st.floats(-3, 3, width=32), min_size=lq * 2, max_size=lq * 2))
-    x = draw(st.lists(st.floats(-3, 3, width=32), min_size=lx * 2, max_size=lx * 2))
-    return (np.array(q, np.float32).reshape(lq, 2),
-            np.array(x, np.float32).reshape(lx, 2))
-
-
-@settings(max_examples=15, deadline=None)
-@given(_series_pair())
-@pytest.mark.parametrize("name", ["erp", "frechet", "dtw"])
-def test_consistency_property_timeseries(name, pair):
-    q, x = pair
-    assert check_consistency(get(name), q, x)
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[dev])")
+    @pytest.mark.parametrize("name", ["erp", "frechet", "dtw"])
+    def test_consistency_property_timeseries(name):
+        pass
