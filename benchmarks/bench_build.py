@@ -1,0 +1,113 @@
+"""Bulk-construction benchmark — the build-side companion to figs. 8-11.
+
+On the paper's sweep datasets, build time dominates end-to-end cost once
+queries are batched; this suite measures construction in the same currency
+as the query benchmarks: exact evaluations and backend dispatches, both
+read from the counter's ``build`` bucket.
+
+For each index the reference workload (n >= 1000 windows) is built twice:
+
+* ``seq``  — the classic loader: one sequential insert-plan drive per
+  object (dispatch counts identical to the historical pair-at-a-time
+  descent);
+* ``bulk`` — ``build_batched``: cohorts of concurrent insert plans through
+  the frontier engine, one merged dispatch per descent level per cohort
+  plus one arbitration dispatch per cohort.
+
+Hit-set parity between the two nets is asserted, and the bulk loader must
+collapse dispatches by >= 5x (the PR-2 acceptance bound).  ``mv`` rows
+time the stacked profile/table construction, ``flatten`` rows the batched
+net flattening for the device path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.covertree import CoverTree
+from repro.core.distributed import flatten_net
+from repro.core.refindex import MVReferenceIndex
+from repro.core.refnet import ReferenceNet
+from repro.data import synthetic
+from repro.distances import get
+
+#: the acceptance bound on the bulk loader's dispatch collapse
+MIN_DISPATCH_DROP = 5.0
+
+
+def _build_pair(name, cls, dist_name, data, eps_prime, out, **kw):
+    dist = get(dist_name)
+    n = len(data)
+
+    t0 = time.perf_counter()
+    seq = cls(dist, data, eps_prime=eps_prime, **kw).build()
+    seq_dt = time.perf_counter() - t0
+    seq_evals = seq.counter.build_count
+    seq_disp = seq.counter.build_dispatches
+    out.append(row(
+        f"build_{name}_seq", seq_dt * 1e6 / n,
+        build_evals=seq_evals, build_dispatches=seq_disp,
+    ))
+
+    t0 = time.perf_counter()
+    bulk = cls(dist, data, eps_prime=eps_prime, **kw).build_batched()
+    bulk_dt = time.perf_counter() - t0
+    bulk_evals = bulk.counter.build_count
+    bulk_disp = bulk.counter.build_dispatches
+    drop = seq_disp / max(bulk_disp, 1)
+    assert drop >= MIN_DISPATCH_DROP, \
+        f"{name}: dispatch drop {drop:.1f}x < {MIN_DISPATCH_DROP}x"
+    for qi in (3, n // 2):
+        q = data[qi]
+        assert bulk.range_query(q, 2 * eps_prime) == \
+            seq.range_query(q, 2 * eps_prime), f"{name} parity at {qi}"
+    out.append(row(
+        f"build_{name}_bulk", bulk_dt * 1e6 / n,
+        build_evals=bulk_evals, build_dispatches=bulk_disp,
+        dispatch_drop=round(drop, 1),
+        speedup=round(seq_dt / max(bulk_dt, 1e-9), 2),
+    ))
+    return bulk
+
+
+def run(full: bool = False):
+    out = []
+    n = 4000 if full else 1200
+    data = synthetic.proteins(n, seed=0)
+
+    net = _build_pair("refnet_proteins", ReferenceNet, "levenshtein",
+                      data, 1.0, out)
+    _build_pair("refnet5_proteins", ReferenceNet, "levenshtein",
+                data, 1.0, out, num_max=5, tight_bounds=True)
+    _build_pair("covertree_proteins", CoverTree, "levenshtein",
+                data, 1.0, out)
+
+    traj = synthetic.trajectories(n // 2, seed=0)
+    _build_pair("refnet_traj_erp", ReferenceNet, "erp", traj, 2.0, out)
+
+    # MV: stacked profile/table dispatches
+    t0 = time.perf_counter()
+    mv = MVReferenceIndex(get("levenshtein"), data, n_refs=5).build()
+    dt = time.perf_counter() - t0
+    out.append(row(
+        "build_mv5_proteins", dt * 1e6 / n,
+        build_evals=mv.counter.build_count,
+        build_dispatches=mv.counter.build_dispatches,
+    ))
+
+    # device flatten of the bulk-built net (batched, link-dist reuse)
+    before_e = net.counter.build_count
+    before_d = net.counter.build_dispatches
+    t0 = time.perf_counter()
+    flat = flatten_net(net)
+    dt = time.perf_counter() - t0
+    out.append(row(
+        "build_flatten_proteins", dt * 1e6 / n,
+        build_evals=net.counter.build_count - before_e,
+        build_dispatches=net.counter.build_dispatches - before_d,
+        pivots=flat.n_pivots,
+    ))
+    return out

@@ -1,14 +1,19 @@
-"""Warn-only benchmark regression gate.
+"""Benchmark regression gate: strict on counts, warn-only on timings.
 
-Compares a fresh ``reports/benchmarks.json`` against the checked-in
-baseline (``BENCH_query.json``) row-by-row (matched on ``name``) and emits
-GitHub Actions ``::warning::`` annotations for timing regressions and for
-any increase in the paper's exact-evaluation fraction.  Always exits 0 —
-the gate records the perf trajectory without blocking PRs (flip
-``--strict`` once the fleet of CI runners is quiet enough to trust).
+Compares a fresh ``reports/benchmarks.json`` against a checked-in baseline
+row-by-row (matched on ``name``).  Two classes of metric are treated
+differently:
+
+* **count metrics** (exact-evaluation fractions, backend dispatch counts —
+  deterministic for fixed seeds) fail the gate when they regress and
+  ``--strict-counts`` (the CI default since PR 2) or ``--strict`` is set;
+* **timing metrics** (``us_per_call``) only ever emit GitHub Actions
+  ``::warning::`` annotations unless full ``--strict`` is requested — CI
+  runner variance makes wall-clock a trajectory signal, not a gate.
 
   python -m benchmarks.compare --baseline BENCH_query.json \
-      --report reports/benchmarks.json [--tolerance 1.5] [--strict]
+      --report reports/benchmarks.json [--tolerance 1.5] \
+      [--strict-counts] [--strict]
 """
 
 from __future__ import annotations
@@ -18,15 +23,20 @@ import json
 import pathlib
 import sys
 
+#: deterministic, seed-fixed metrics: any increase is a real regression
+COUNT_KEYS = ("evals_frac", "dispatches", "build_evals", "build_dispatches",
+              "lb_evals", "rounds")
+
 
 def _rows_by_name(rows):
     return {r["name"]: r for r in rows if "name" in r}
 
 
 def compare(baseline_rows, report_rows, tolerance: float):
+    """Returns (n_compared, timing_warnings, count_warnings)."""
     base = _rows_by_name(baseline_rows)
     rep = _rows_by_name(report_rows)
-    warnings = []
+    timing, counts = [], []
     compared = 0
     for name, b in sorted(base.items()):
         r = rep.get(name)
@@ -35,15 +45,15 @@ def compare(baseline_rows, report_rows, tolerance: float):
         compared += 1
         b_us, r_us = float(b["us_per_call"]), float(r["us_per_call"])
         if b_us > 0 and r_us > tolerance * b_us:
-            warnings.append(
+            timing.append(
                 f"{name}: {r_us:.1f}us vs baseline {b_us:.1f}us "
                 f"({r_us / b_us:.2f}x, tolerance {tolerance:.2f}x)")
-        for key in ("evals_frac", "dispatches"):
+        for key in COUNT_KEYS:
             if key in b and key in r and float(r[key]) > float(b[key]) * 1.01:
-                warnings.append(
+                counts.append(
                     f"{name}: {key} rose {b[key]} -> {r[key]} "
                     "(pruning/batching regression)")
-    return compared, warnings
+    return compared, timing, counts
 
 
 def main() -> int:
@@ -52,8 +62,11 @@ def main() -> int:
     ap.add_argument("--report", default="reports/benchmarks.json")
     ap.add_argument("--tolerance", type=float, default=1.5,
                     help="allowed slowdown factor before warning")
+    ap.add_argument("--strict-counts", action="store_true",
+                    help="exit nonzero on count-metric regressions "
+                         "(deterministic; the CI gate)")
     ap.add_argument("--strict", action="store_true",
-                    help="exit nonzero on warnings (off: warn-only)")
+                    help="exit nonzero on ANY warning, timing included")
     args = ap.parse_args()
 
     baseline_path = pathlib.Path(args.baseline)
@@ -64,16 +77,23 @@ def main() -> int:
     if not report_path.exists():
         print(f"::warning::no report at {report_path}; skipping compare")
         return 0
-    compared, warnings = compare(
+    compared, timing, counts = compare(
         json.loads(baseline_path.read_text()),
         json.loads(report_path.read_text()),
         args.tolerance)
     print(f"# compared {compared} rows against {baseline_path}")
-    for w in warnings:
+    for w in timing:
         print(f"::warning::{w}")
-    if not warnings:
+    for w in counts:
+        print(f"::error::{w}" if (args.strict or args.strict_counts)
+              else f"::warning::{w}")
+    if not timing and not counts:
         print("# no regressions beyond tolerance")
-    return 1 if (args.strict and warnings) else 0
+    if args.strict and (timing or counts):
+        return 1
+    if args.strict_counts and counts:
+        return 1
+    return 0
 
 
 if __name__ == "__main__":

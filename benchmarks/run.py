@@ -19,6 +19,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 MODULES = [
     ("distances", "benchmarks.bench_distances"),   # fig 4
     ("space", "benchmarks.bench_space"),           # figs 5-7
+    ("build", "benchmarks.bench_build"),           # bulk construction
     ("query", "benchmarks.bench_query"),           # figs 8-11
     ("matching", "benchmarks.bench_matching"),     # fig 12 + types II/III
     ("device", "benchmarks.bench_device"),         # TPU-adapted mode

@@ -37,6 +37,17 @@ Frontiers carry a ``kind``:
   verdict because ``lb <= delta``.  With the cascade off (default), engine
   results — hit sets AND exact-evaluation counts — are identical to host
   mode.
+
+Frontiers also carry an accounting ``bucket`` (``counter.QUERY`` /
+``counter.BUILD``): construction plans (``ReferenceNet.insert_plan``) charge
+the counter's build bucket so query-time pruning ratios stay clean.
+
+Plans are not restricted to query-vs-window work.  ``BatchEngine.run``
+accepts either a ``(n_plans, l[, d])`` array of query rows *or* a 1-D
+integer vector of **data indices** — the pairwise (node-vs-node) mode used
+by bulk construction, where plan ``i``'s left-hand side is
+``counter.data[queries[i]]``.  Everything else (round merging, one dispatch
+per round, per-plan send) is identical.
 """
 
 from __future__ import annotations
@@ -46,20 +57,22 @@ from typing import Generator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.counter import CountedDistance
+from repro.core.counter import BUILD, QUERY, CountedDistance
 
 EXACT = "exact"
 VERDICT = "verdict"
 
-#: yields Frontier, receives (m,) float32 distances, returns List[int] hits
+#: yields Frontier, receives (m,) float32 distances, returns the plan's
+#: result (sorted hit list for queries, an InsertOutcome for construction)
 Plan = Generator
 
 
 @dataclasses.dataclass
 class Frontier:
-    """One round of undecided candidates of a single range-query plan."""
+    """One round of undecided candidates of a single frontier plan."""
     idxs: np.ndarray
     kind: str = EXACT
+    bucket: str = QUERY     # counter accounting bucket (QUERY / BUILD)
 
     def __post_init__(self):
         self.idxs = np.asarray(self.idxs, np.int64)
@@ -67,7 +80,7 @@ class Frontier:
 
 def drive(plan: Plan, counter: CountedDistance, q: np.ndarray,
           q_len: Optional[int] = None, *, eps: Optional[float] = None,
-          lb_cascade: bool = False) -> List[int]:
+          lb_cascade: bool = False):
     """Sequential host-mode driver: one backend dispatch per frontier."""
     q = np.asarray(q)
     qlen = len(q) if q_len is None else int(q_len)
@@ -79,7 +92,7 @@ def drive(plan: Plan, counter: CountedDistance, q: np.ndarray,
                 qs = np.repeat(q[None, :qlen], idxs.size, 0)
                 ds = _cascade(counter, qs, idxs, qlen, eps)
             else:
-                ds = counter.eval(q, idxs, qlen)
+                ds = counter.eval(q, idxs, qlen, bucket=fr.bucket)
             fr = plan.send(ds)
     except StopIteration as stop:
         return stop.value if stop.value is not None else []
@@ -119,11 +132,30 @@ class BatchEngine:
 
     def run(self, plans: Sequence[Plan], queries: np.ndarray,
             eps: float, q_len: Optional[int] = None) -> List[List[int]]:
-        """Drive ``plans[i]`` with query row ``queries[i]``; returns hits per
-        plan.  Hit sets and exact-eval counts match sequential host mode."""
+        """Drive ``plans[i]`` with query row ``queries[i]``; returns each
+        plan's result.  Hit sets and exact-eval counts match sequential host
+        mode.
+
+        ``queries`` may instead be a 1-D integer vector of indices into
+        ``counter.data`` — the pairwise (node-vs-node) mode: plan ``i``'s
+        left-hand rows are gathered from the indexed database itself, which
+        is how bulk construction drives cohorts of concurrent insert plans.
+        """
         queries = np.asarray(queries)
+        pair_mode = queries.ndim == 1 and queries.dtype.kind in "iu"
         assert len(plans) == len(queries), "one query row per plan"
-        qlen = queries.shape[1] if q_len is None else int(q_len)
+        if q_len is not None:
+            qlen = int(q_len)
+        elif pair_mode:
+            qlen = self.counter.data.shape[1]
+        else:
+            qlen = queries.shape[1]
+
+        def qrows(row_ids: np.ndarray) -> np.ndarray:
+            rows = self.counter.data[queries[row_ids]] if pair_mode \
+                else queries[row_ids]
+            return rows[:, :qlen]
+
         results: List[Optional[List[int]]] = [None] * len(plans)
 
         state = {}
@@ -145,12 +177,16 @@ class BatchEngine:
                 [np.full(m, state[i].kind == VERDICT)
                  for i, m in zip(order, sizes)]) \
                 if sizes else np.zeros((0,), bool)
+            # a merged round is charged to BUILD only when every contributing
+            # frontier is construction work (one call site never mixes them)
+            bucket = BUILD if all(state[i].bucket == BUILD for i in order) \
+                else QUERY
 
             ds = np.zeros(cand.size, np.float32)
             exact = np.ones(cand.size, bool)
             if self.lb_cascade and verdict.any():
                 lbs = self.counter.lower_bounds(
-                    queries[rows[verdict]], cand[verdict], qlen)
+                    qrows(rows[verdict]), cand[verdict], qlen)
                 if lbs is not None:
                     pruned = lbs > eps
                     ds[np.flatnonzero(verdict)[pruned]] = lbs[pruned]
@@ -158,7 +194,7 @@ class BatchEngine:
             if exact.any():
                 # the ONE exact dispatch of this round, whole bucket at once
                 ds[exact] = self.counter.eval_stacked(
-                    queries[rows[exact]], cand[exact], qlen)
+                    qrows(rows[exact]), cand[exact], qlen, bucket=bucket)
             self.rounds += 1
 
             new_state = {}

@@ -12,7 +12,13 @@ exact and comparable.  Batch-aware accounting separates three quantities:
   is where the wall-clock win over pair-at-a-time traversal comes from;
 * ``lb_count``   — cheap lower-bound evaluations spent by the optional LB
   cascade (never mixed into ``count``, so paper pruning ratios stay
-  comparable).
+  comparable);
+* ``build_count`` / ``build_dispatches`` — the *construction* bucket: every
+  evaluation spent building an index (insert descents, cohort arbitration,
+  MV profiles/tables, net flattening) is charged here instead of ``count``,
+  so query-time pruning ratios start clean without a ``reset()`` and build
+  cost is measured in the same currency as queries
+  (``benchmarks/bench_build.py``).
 
 Backends (per-round batches are shape-bucketed, so all three see static
 shapes):
@@ -34,6 +40,10 @@ from repro.distances import base as dist_base
 from repro.distances import np_backend
 
 BACKENDS = ("numpy", "jax", "pallas")
+
+#: accounting buckets — query-time (the paper's currency) vs construction
+QUERY = "query"
+BUILD = "build"
 
 #: registry name -> Pallas wavefront mode (kernels/ops.py)
 _PALLAS_MODE = {"dtw": "dtw", "erp": "erp", "frechet": "dfd",
@@ -57,6 +67,8 @@ def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
 
         def jax_batch(xs, ys, lx=None, ly=None):
             xs, ys = np.asarray(xs), np.asarray(ys)
+            if len(xs) == 0:
+                return np.zeros((0,), np.float32)
             L = max(xs.shape[1], ys.shape[1])
 
             def pad_len(a):
@@ -89,6 +101,8 @@ def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
 
         def pallas_batch(xs, ys, lx=None, ly=None):
             xs, ys = np.asarray(xs), np.asarray(ys)
+            if len(xs) == 0:
+                return np.zeros((0,), np.float32)
             # fixed-shape kernel: the engine buckets by length, so every row
             # of a dispatch shares one (Lx, Ly)
             if lx is not None:
@@ -127,14 +141,19 @@ class CountedDistance:
         self.count = 0       # exact evaluations (paper currency)
         self.dispatches = 0  # Python-level backend dispatches
         self.lb_count = 0    # cheap lower-bound evaluations (LB cascade)
+        self.build_count = 0       # exact evaluations spent on construction
+        self.build_dispatches = 0  # backend dispatches spent on construction
 
     def reset(self) -> None:
         self.count = 0
         self.dispatches = 0
         self.lb_count = 0
+        self.build_count = 0
+        self.build_dispatches = 0
 
     def eval(self, q: np.ndarray, idxs: Sequence[int],
-             q_len: Optional[int] = None) -> np.ndarray:
+             q_len: Optional[int] = None, *,
+             bucket: str = QUERY) -> np.ndarray:
         """delta(q, data[i]) for i in idxs. Counts len(idxs) evaluations."""
         idxs = np.asarray(idxs, np.int64)
         if idxs.size == 0:
@@ -142,10 +161,11 @@ class CountedDistance:
         q = np.asarray(q)
         qlen = len(q) if q_len is None else q_len
         qs = np.repeat(q[None, :qlen], idxs.size, 0)
-        return self.eval_stacked(qs, idxs, qlen)
+        return self.eval_stacked(qs, idxs, qlen, bucket=bucket)
 
     def eval_stacked(self, qs: np.ndarray, idxs: Sequence[int],
-                     q_len: Optional[int] = None) -> np.ndarray:
+                     q_len: Optional[int] = None, *,
+                     bucket: str = QUERY) -> np.ndarray:
         """delta(qs[i], data[idxs[i]]) row-wise in ONE backend dispatch.
 
         ``qs`` holds one (possibly repeated) query row per candidate — the
@@ -162,8 +182,12 @@ class CountedDistance:
         if not self.dist.variable_length and qlen != L:
             raise ValueError(
                 f"{self.dist.name} requires equal lengths ({qlen} != {L})")
-        self.count += int(idxs.size)
-        self.dispatches += 1
+        if bucket == BUILD:
+            self.build_count += int(idxs.size)
+            self.build_dispatches += 1
+        else:
+            self.count += int(idxs.size)
+            self.dispatches += 1
         # Rectangular (Lx != Ly) tiles are supported by all backends.
         xs = qs[:, :qlen]
         lx = np.full(len(ys), qlen)
@@ -189,6 +213,20 @@ class CountedDistance:
         ly = np.full(len(ys), ys.shape[1])
         return np.asarray(lb(qs[:, :qlen], ys, lx, ly), np.float32)
 
-    def pairwise(self, i: int, idxs: Sequence[int]) -> np.ndarray:
-        """delta(data[i], data[j]) for j in idxs (used at build time)."""
-        return self.eval(self.data[i], idxs)
+    def pairwise(self, i: int, idxs: Sequence[int], *,
+                 bucket: str = BUILD) -> np.ndarray:
+        """delta(data[i], data[j]) for j in idxs (node-vs-node; charged to
+        the ``build`` bucket by default — its callers are constructors)."""
+        return self.eval(self.data[i], idxs, bucket=bucket)
+
+    def eval_pairs(self, lefts: Sequence[int], rights: Sequence[int], *,
+                   bucket: str = BUILD) -> np.ndarray:
+        """delta(data[lefts[i]], data[rights[i]]) row-wise in ONE dispatch.
+
+        The pairwise (node-vs-node) analogue of :meth:`eval_stacked`; used
+        by bulk construction (cohort conflict arbitration, net flattening,
+        MV profile/table assembly)."""
+        lefts = np.asarray(lefts, np.int64)
+        if lefts.size == 0:
+            return np.zeros((0,), np.float32)
+        return self.eval_stacked(self.data[lefts], rights, bucket=bucket)

@@ -5,9 +5,11 @@ Structurally a reference net restricted to a single parent per node
 net-vs-tree distinction of the paper's Fig. 2: with one parent, a query may
 have to descend lists whose reference is far from Q even when another,
 closer reference also covers the same data.  Implemented as a thin subclass
-so both structures share traversal, counting, and invariant machinery —
-space/query differences then isolate the multi-parent effect, as in the
-paper's §8.2 comparison.
+so both structures share traversal, counting, invariant, and construction
+machinery — including the plan-based ``insert_plan``/``build_batched`` bulk
+loader (cohort arbitration keeps only the nearest covering owner here, via
+``num_max=1``) — space/query differences then isolate the multi-parent
+effect, as in the paper's §8.2 comparison.
 """
 
 from __future__ import annotations

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,15 +51,60 @@ class FlatNet:
     data: np.ndarray            # (N, l[, d]) all windows
     n_pivots: int
     dist_name: str
+    pivot_ids: Optional[np.ndarray] = None   # (P,) window id of each pivot
 
     @property
     def eval_width(self) -> int:
         return self.members.shape[1]
 
+    def append(self, pivot_rows: Sequence[int], member_ids: Sequence[int],
+               member_dists: Sequence[float], new_data: Optional[np.ndarray]
+               = None) -> "FlatNet":
+        """Incrementally attach members (``member_ids[k]`` under pivot row
+        ``pivot_rows[k]`` at distance ``member_dists[k]``) in place.
+
+        ``new_data`` extends the window database when the ids are fresh
+        (online inserts after flattening); member lists re-pad to the new
+        width and pivot radii grow monotonically, so a refreshed net never
+        needs a full re-flatten to stay queryable on device.
+        """
+        if new_data is not None and len(new_data):
+            self.data = np.concatenate([self.data, np.asarray(new_data)])
+        pivot_rows = np.asarray(pivot_rows, np.int64)
+        member_ids = np.asarray(member_ids, np.int64)
+        member_dists = np.asarray(member_dists, np.float32)
+        counts = (self.members >= 0).sum(axis=1)
+        need = counts.copy()
+        for p in pivot_rows:
+            need[p] += 1
+        grow = int(need.max() - self.members.shape[1])
+        if grow > 0:
+            P = self.members.shape[0]
+            self.members = np.concatenate(
+                [self.members, np.full((P, grow), -1, np.int64)], axis=1)
+            self.member_dist = np.concatenate(
+                [self.member_dist, np.zeros((P, grow), np.float32)], axis=1)
+        for p, w, d in zip(pivot_rows, member_ids, member_dists):
+            k = int(counts[p])
+            self.members[p, k] = w
+            self.member_dist[p, k] = d
+            counts[p] += 1
+            if d > self.pivot_radius[p]:
+                self.pivot_radius[p] = d
+        return self
+
 
 def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
                 ) -> FlatNet:
-    """Flatten a host reference net at ``pivot_level`` (default ~sqrt(N))."""
+    """Flatten a host reference net at ``pivot_level`` (default ~sqrt(N)).
+
+    Pivot->member distances come from the net itself where a member is a
+    direct child of its pivot (the exact link distance is already stored —
+    a bulk- or sequentially-built net hands those over for free); only the
+    remaining pairs are evaluated, in a single stacked dispatch through the
+    net's counter (``build`` bucket, so the flatten cost is measured on
+    whichever backend the counter runs).
+    """
     N = len(net.data)
     levels = sorted({n.level for n in net.nodes.values() if n.level >= 0})
     if pivot_level is None:
@@ -83,7 +128,6 @@ def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
 
     for pid in pivot_ids:
         assign(pid)
-    # distances pivot->member (batched, not counted: build-time)
     members: List[List[int]] = [[] for _ in pivot_ids]
     pidx = {p: i for i, p in enumerate(pivot_ids)}
     for x, p in pivot_of.items():
@@ -92,20 +136,38 @@ def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
     P = len(pivot_ids)
     mem = np.full((P, M), -1, np.int64)
     mdist = np.zeros((P, M), np.float32)
-    batch = np_backend.batch_for(net.dist.name)
-    radius = np.zeros((P,), np.float32)
+    # reuse stored link distances for direct children; stack the rest into
+    # one batched dispatch (no per-pivot host loop)
+    eval_l: List[int] = []
+    eval_r: List[int] = []
+    eval_at: List[Tuple[int, int]] = []
     for i, (pid, ms) in enumerate(zip(pivot_ids, members)):
         mem[i, :len(ms)] = ms
-        if ms:
-            ds = np.asarray(batch(
-                np.repeat(net.data[pid][None], len(ms), 0), net.data[ms]))
-            mdist[i, :len(ms)] = ds
-            radius[i] = float(ds.max())
+        pn = net.nodes[pid]
+        link = {c: pn.child_dist[k] for k, c in enumerate(pn.children)}
+        for j, x in enumerate(ms):
+            if x == pid:
+                mdist[i, j] = 0.0
+            elif x in link:
+                mdist[i, j] = link[x]
+            else:
+                eval_l.append(pid)
+                eval_r.append(x)
+                eval_at.append((i, j))
+    if eval_l:
+        ds = net.counter.eval_pairs(eval_l, eval_r)
+        for (i, j), d in zip(eval_at, ds):
+            mdist[i, j] = float(d)
+    valid = mem >= 0
+    radius = np.where(valid.any(axis=1),
+                      np.where(valid, mdist, 0.0).max(axis=1),
+                      0.0).astype(np.float32)
     return FlatNet(
         pivots=np.asarray(net.data[pivot_ids]),
         pivot_radius=radius,
         members=mem, member_dist=mdist,
-        data=np.asarray(net.data), n_pivots=P, dist_name=net.dist.name)
+        data=np.asarray(net.data), n_pivots=P, dist_name=net.dist.name,
+        pivot_ids=np.asarray(pivot_ids, np.int64))
 
 
 def _batch_dist(dist_name: str, qs, xs, interpret=True):
@@ -214,21 +276,75 @@ def host_reference_hits(flat: FlatNet, qs: np.ndarray, eps: float
 
 # -- fleet (multi-shard) version ---------------------------------------------
 
+def merge_flats(flats: Sequence[FlatNet]) -> Tuple[FlatNet, List[int]]:
+    """Stack per-shard FlatNets into ONE flat net over the union.
+
+    Shards partition the windows, so concatenating pivot rows (member ids
+    offset into the concatenated data array, member widths padded to the
+    fleet maximum) yields a FlatNet whose single device query equals the
+    union of the per-shard queries.  Returns the merged net plus each
+    shard's column offset into the merged hit mask.
+    """
+    assert flats, "nothing to merge"
+    assert len({f.dist_name for f in flats}) == 1, "mixed distances"
+    M = max(f.members.shape[1] for f in flats)
+    offsets: List[int] = []
+    mems, mdists, off = [], [], 0
+    for f in flats:
+        offsets.append(off)
+        pad = M - f.members.shape[1]
+        mem = np.pad(f.members, ((0, 0), (0, pad)), constant_values=-1)
+        mems.append(np.where(mem >= 0, mem + off, -1))
+        mdists.append(np.pad(f.member_dist, ((0, 0), (0, pad))))
+        off += len(f.data)
+    return FlatNet(
+        pivots=np.concatenate([f.pivots for f in flats]),
+        pivot_radius=np.concatenate([f.pivot_radius for f in flats]),
+        members=np.concatenate(mems),
+        member_dist=np.concatenate(mdists),
+        data=np.concatenate([f.data for f in flats]),
+        n_pivots=sum(f.n_pivots for f in flats),
+        dist_name=flats[0].dist_name), offsets
+
+
 def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
-                      *, dead: Tuple[int, ...] = (), **kw):
+                      *, dead: Tuple[int, ...] = (), stacked: bool = True,
+                      **kw):
     """Union of per-shard device queries (shards partition the windows).
 
     ``dead`` shards are skipped (the elastic layer rebuilds them); the
     returned mask is per-shard so the caller can re-issue stolen work.
+
+    ``stacked`` (default) merges the alive shards' FlatNet arrays with
+    :func:`merge_flats` and runs ONE device query over the stack — one
+    pivot-kernel call and one survivor compaction for the whole fleet
+    instead of a sequential host-Python loop over shards.  Results are
+    identical; per-shard masks are column slices of the merged mask.  A
+    merged run cannot attribute evaluations to individual shards, so each
+    alive shard's stats entry is an independent dict tagged
+    ``merged=True`` whose counters use ``fleet_*`` keys (summing them
+    across shards would double-count — old per-shard keys are absent on
+    purpose).  ``stacked=False`` keeps the per-shard loop with the
+    classic per-shard stats (useful when shards genuinely live on
+    different processes).
     """
-    results = []
-    stats = []
-    for i, f in enumerate(flats):
-        if i in dead:
-            results.append(None)
-            stats.append(None)
-            continue
-        h, s = device_range_query(f, qs, eps, **kw)
-        results.append(h)
-        stats.append(s)
+    alive = [(i, f) for i, f in enumerate(flats) if i not in dead]
+    results: List[Optional[np.ndarray]] = [None] * len(flats)
+    stats: List[Optional[dict]] = [None] * len(flats)
+    if stacked and len(alive) > 1:
+        merged, offsets = merge_flats([f for _, f in alive])
+        hits, s = device_range_query(merged, qs, eps, **kw)
+        fleet = {"merged": True, "n_shards": len(alive),
+                 "capacity": s["capacity"],
+                 "fleet_pivot_evals": s["pivot_evals"],
+                 "fleet_member_evals": s["member_evals"],
+                 "fleet_total_evals": s["total_evals"]}
+        for (i, f), off in zip(alive, offsets):
+            results[i] = hits[:, off:off + len(f.data)]
+            stats[i] = dict(fleet)
+        return results, stats
+    for i, f in alive:
+        h, st = device_range_query(f, qs, eps, **kw)
+        results[i] = h
+        stats[i] = st
     return results, stats

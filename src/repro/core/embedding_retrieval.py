@@ -64,10 +64,12 @@ class EmbeddingRetriever:
         # treat each vector as a length-1 sequence of d-dim elements so the
         # registry distance applies; equivalently plain L2 over (N, d).
         self.counter = CountedDistance(dist, vectors[:, None, :])
+        # bulk-loaded: embedding corpora are built in one shot, so the
+        # cohort loader's dispatch collapse applies directly
         self.net = ReferenceNet(dist, vectors[:, None, :],
                                 eps_prime=eps_prime, num_max=num_max,
                                 tight_bounds=tight_bounds,
-                                counter=self.counter).build()
+                                counter=self.counter).build_batched()
 
     def query(self, vec: np.ndarray, eps: float) -> List[Tuple[Window, int]]:
         hits = self.net.range_query(vec[None, :], eps)

@@ -120,21 +120,52 @@ class SubsequenceMatcher:
         self.index = None
         self.engine: Optional[batch_engine.BatchEngine] = None
         self._verify_batch = None
+        self._flat = None        # cached FlatNet (see flat_net())
+        self._flat_level = None  # pivot_level the cache was built with
 
     # -- steps 1-2 (offline) -------------------------------------------------
 
     def build(self, seqs: Sequence[np.ndarray]) -> "SubsequenceMatcher":
+        """Steps 1-2: window the sequences and build the index.
+
+        The metric hierarchies (refnet / covertree) are bulk-loaded through
+        the frontier engine (``build_batched`` — cohorts of concurrent
+        insert plans, one merged dispatch per descent level); construction
+        cost lands in the counter's ``build`` bucket, so ``eval_count`` /
+        ``dispatch_count`` report query work only.
+        """
         self.seqs = [np.asarray(x) for x in seqs]
         self.windows, self.meta = seg.partition_windows(self.seqs, self.lam)
         counter = CountedDistance(self.dist, self.windows,
                                   backend=self.backend)
         cls = INDEXES[self.index_kind]
-        self.index = cls(self.dist, self.windows, counter=counter,
-                         **self.index_kwargs).build()
+        index = cls(self.dist, self.windows, counter=counter,
+                    **self.index_kwargs)
+        if self.index_kind in ("refnet", "covertree"):
+            self.index = index.build_batched()
+        else:
+            self.index = index.build()
         self.engine = batch_engine.BatchEngine(self.index.counter,
                                                lb_cascade=self.lb_cascade)
         self._verify_batch = np_backend.batch_for(self.dist.name)
+        self._flat = None
+        self._flat_level = None
         return self
+
+    def flat_net(self, pivot_level: Optional[int] = None):
+        """Device-side view of the freshly built net (cached).
+
+        Hands the bulk-built reference net straight to
+        ``core.distributed.device_range_query``: ``flatten_net`` reuses the
+        net's stored link distances and one stacked dispatch for the rest,
+        so no second pair-at-a-time host pass happens here."""
+        assert self.index_kind in ("refnet", "covertree"), \
+            "only the metric hierarchies flatten to a FlatNet"
+        if self._flat is None or self._flat_level != pivot_level:
+            from repro.core.distributed import flatten_net
+            self._flat = flatten_net(self.index, pivot_level)
+            self._flat_level = pivot_level
+        return self._flat
 
     @property
     def eval_count(self) -> int:

@@ -37,17 +37,17 @@ class MVReferenceIndex:
         self.table: Optional[np.ndarray] = None  # (n_refs, N)
 
     def build(self) -> "MVReferenceIndex":
+        """Stacked bulk construction: the candidate-profile and table loops
+        are (candidate x sample) and (reference x N) pairwise blocks, each
+        assembled in one ``eval_pairs`` dispatch (chunked only to bound the
+        wavefront's working set) and charged to the counter's ``build``
+        bucket — query-time accounting starts at zero without a reset."""
         N = len(self.data)
         cand = self._rng.choice(N, size=min(4 * self.n_refs, N), replace=False)
         samp = self._rng.choice(N, size=min(self._sample, N), replace=False)
         # variance of each candidate's distance profile over the sample
-        # (build-time cost; not part of query-time eval counts)
-        scores = []
-        profiles = []
-        for c in cand:
-            d = self.counter.eval(self.data[c], samp)
-            profiles.append(d)
-            scores.append(float(np.var(d)))
+        profiles = self._pair_block(cand, samp)
+        scores = profiles.var(axis=1)
         order = np.argsort(scores)[::-1]
         picked: List[int] = []
         for o in order:
@@ -65,11 +65,24 @@ class MVReferenceIndex:
                 break
             picked.append(extra[0])
         self.refs = [int(cand[p]) for p in picked]
-        rows = [self.counter.eval(self.data[r], np.arange(N))
-                for r in self.refs]
-        self.table = np.stack(rows)
-        self.counter.reset()  # query-time accounting starts clean
+        self.table = self._pair_block(np.asarray(self.refs, np.int64),
+                                      np.arange(N, dtype=np.int64))
         return self
+
+    #: rows per build dispatch — bounds the numpy wavefront's (B, Lx, Ly)
+    #: cost tensor while keeping dispatch counts O(k*N / cap), not O(k)
+    _CHUNK_ROWS = 1 << 17
+
+    def _pair_block(self, lefts: np.ndarray, rights: np.ndarray
+                    ) -> np.ndarray:
+        """(len(lefts), len(rights)) distance block via stacked dispatches."""
+        ll = np.repeat(np.asarray(lefts, np.int64), len(rights))
+        rr = np.tile(np.asarray(rights, np.int64), len(lefts))
+        out = np.empty(ll.size, np.float32)
+        for s in range(0, ll.size, self._CHUNK_ROWS):
+            e = min(s + self._CHUNK_ROWS, ll.size)
+            out[s:e] = self.counter.eval_pairs(ll[s:e], rr[s:e])
+        return out.reshape(len(lefts), len(rights))
 
     def range_query(self, q: np.ndarray, eps: float,
                     q_len: Optional[int] = None, *,

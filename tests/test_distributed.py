@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.distributed import (FlatNet, device_range_query, flatten_net,
-                                    fleet_range_query, host_reference_hits)
+                                    fleet_range_query, host_reference_hits,
+                                    merge_flats)
 from repro.core.refnet import ReferenceNet
 from repro.data.synthetic import proteins, trajectories
 from repro.distances import get
@@ -73,6 +74,98 @@ def test_fleet_union_is_exact_and_survives_dead_shard():
     assert res2[1] is None
     np.testing.assert_array_equal(res2[0], res[0])
     np.testing.assert_array_equal(res2[2], res[2])
+
+
+def test_fleet_stacked_matches_per_shard_loop():
+    """The stacked fleet path (merge_flats + one device query) returns the
+    exact per-shard masks of the sequential host-Python loop."""
+    data = proteins(240, seed=12)
+    thirds = np.array_split(np.arange(len(data)), 3)
+    flats = [flatten_net(_net(data[ix], "levenshtein", 1.0))
+             for ix in thirds]
+    qs = data[:4]
+    stacked, st_stats = fleet_range_query(flats, qs, eps=2.0, stacked=True)
+    looped, _ = fleet_range_query(flats, qs, eps=2.0, stacked=False)
+    for s, l in zip(stacked, looped):
+        np.testing.assert_array_equal(s, l)
+    assert st_stats[0].get("merged") and st_stats[0]["n_shards"] == 3
+    assert st_stats[0]["fleet_total_evals"] > 0
+    assert st_stats[0] is not st_stats[1]  # independent per-shard dicts
+    # merged width pads every shard's member lists to the fleet maximum
+    merged, offsets = merge_flats(flats)
+    assert merged.eval_width == max(f.eval_width for f in flats)
+    assert offsets == [0, len(flats[0].data),
+                       len(flats[0].data) + len(flats[1].data)]
+
+
+def test_flatten_reuses_stored_link_distances():
+    """flatten_net takes direct pivot->child distances from the net instead
+    of re-evaluating them: the flatten dispatch spends strictly fewer
+    evaluations than the total member count, and the distances match a
+    direct computation."""
+    from repro.distances import np_backend
+    data = proteins(200, seed=13)
+    net = _net(data, "levenshtein", 1.0)
+    before = net.counter.build_count
+    flat = flatten_net(net)
+    spent = net.counter.build_count - before
+    n_members = int((flat.members >= 0).sum())
+    assert spent < n_members, (spent, n_members)
+    batch = np_backend.batch_for("levenshtein")
+    for i in range(flat.n_pivots):
+        ms = flat.members[i][flat.members[i] >= 0]
+        if ms.size == 0:
+            continue
+        pid = int(flat.pivot_ids[i])
+        want = np.asarray(batch(
+            np.repeat(data[pid][None], ms.size, 0), data[ms]))
+        np.testing.assert_allclose(flat.member_dist[i, :ms.size], want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_flatnet_append_stays_exact():
+    """Incremental append: fresh windows attached to existing pivots keep
+    device queries exact without re-flattening."""
+    from repro.distances import np_backend
+    data = proteins(170, seed=14)
+    base, new = data[:150], data[150:]
+    flat = flatten_net(_net(base, "levenshtein", 1.0))
+    batch = np_backend.batch_for("levenshtein")
+    rows, ids, dists = [], [], []
+    for k, w in enumerate(new):
+        ds = np.asarray(batch(
+            np.repeat(w[None], flat.n_pivots, 0), flat.pivots))
+        p = int(np.argmin(ds))
+        rows.append(p)
+        ids.append(150 + k)
+        dists.append(float(ds[p]))
+    old_width = flat.eval_width
+    flat.append(rows, ids, dists, new_data=new)
+    assert len(flat.data) == len(data)
+    assert flat.eval_width >= old_width
+    qs = data[:5]
+    hits, _ = device_range_query(flat, qs, eps=2.0)
+    np.testing.assert_array_equal(hits, host_reference_hits(flat, qs, 2.0))
+
+
+def test_matcher_flat_net_cache_respects_pivot_level():
+    from repro.core.matching import SubsequenceMatcher
+    rng = np.random.default_rng(15)
+    seqs = [rng.integers(0, 8, size=(60,)) for _ in range(3)]
+    m = SubsequenceMatcher("levenshtein", 8, 1, index="refnet",
+                           tight_bounds=True).build(seqs)
+    default = m.flat_net()
+    assert m.flat_net() is default            # same level -> cached
+    lvl = 1
+    explicit = m.flat_net(pivot_level=lvl)
+    assert m.flat_net(pivot_level=lvl) is explicit
+    back = m.flat_net()                       # default again -> re-flatten
+    assert back is not explicit
+    qs = m.windows[:3]
+    for flat in (explicit, back):
+        hits, _ = device_range_query(flat, qs, eps=1.0)
+        np.testing.assert_array_equal(
+            hits, host_reference_hits(flat, qs, 1.0))
 
 
 def test_embedding_retrieval_end_to_end():
