@@ -56,17 +56,27 @@ def run(full: bool = False):
             rounds=engine.rounds,
         ))
 
-    # fleet: shards + resize
+    # fleet: shards + resize (the dedicated elastic suite gates the counts;
+    # these rows track the device-suite view of the same paths)
     fleet = ElasticIndex("levenshtein", data, [f"w{i}" for i in range(4)],
                          tight_bounds=True)
     t0 = time.perf_counter()
     for q in qs:
-        fleet.range_query(q, 2.0)
+        fleet.range_query(q, 2.0, batched=False)
     dt = (time.perf_counter() - t0) * 1e6 / len(qs)
     out.append(row("fleet_query_4shards", dt,
-                   evals=fleet.eval_count()))
+                   evals=fleet.eval_count()["query"]))
+    fleet.range_query_batch(qs, 2.0)  # warm the stacked jit
+    dev0 = fleet.device_stats["total_evals"]
+    t0 = time.perf_counter()
+    fleet.range_query_batch(qs, 2.0)
+    dt = (time.perf_counter() - t0) * 1e6 / len(qs)
+    out.append(row("fleet_query_4shards_stacked", dt,
+                   device_evals=fleet.device_stats["total_evals"] - dev0))
+    build_before = fleet.eval_count()["build"]
     t0 = time.perf_counter()
     frac = fleet.resize([f"w{i}" for i in range(5)])
     dt = (time.perf_counter() - t0) * 1e6
-    out.append(row("fleet_resize_4to5", dt, moved_frac=round(frac, 3)))
+    out.append(row("fleet_resize_4to5", dt, moved_frac=round(frac, 3),
+                   build_evals=fleet.eval_count()["build"] - build_before))
     return out

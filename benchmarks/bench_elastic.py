@@ -1,0 +1,121 @@
+"""Elastic fleet serving benchmark — the serving-side companion to the
+build suite.
+
+The paper's scale claim (§8) only becomes an end-to-end win when the
+*fleet* layer rides the batched substrate, so this suite gates the two
+PR-3 properties:
+
+* **Stacked serving parity/speedup** — `ElasticIndex.range_query_batch`
+  (merge_flats + ONE device query for the whole fleet) must return exactly
+  the host per-shard loop's hit sets; both paths are timed and the loop's
+  exact-evaluation fraction (the paper currency) is recorded strict.
+* **Incremental resize cost** — an N->N+1 resize moves ~1/(N+1) of the
+  windows (rendezvous hashing) and must re-spend at most
+  ``MAX_RESIZE_BUILD_FRAC = 2/N`` of the original full-build cost in the
+  counter's ``build`` bucket: the new worker bulk-builds its ~n/(N+1)
+  windows, every surviving shard sheds its departed windows by Alg.-2
+  deletion + zero-eval FlatNet masking instead of rebuilding.  The shrink
+  back to N (survivors *gain* windows through extend_data + cohort
+  bulk-load + FlatNet.append) is gated the same way, and the round-tripped
+  fleet must serve the original hit sets.
+
+Count metrics (``build_evals``, ``evals_frac``) are deterministic for the
+fixed seeds and compared strict in CI; timings are warn-only as usual.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mutate_queries, row
+from repro.data import synthetic
+from repro.launch.elastic import ElasticIndex
+
+#: an N->N+1 (or N+1->N) resize may re-spend at most this fraction of the
+#: original full-build evaluations (acceptance bound: 2/N for N=4 shards)
+N_SHARDS = 4
+MAX_RESIZE_BUILD_FRAC = 2.0 / N_SHARDS
+
+
+def run(full: bool = False):
+    out = []
+    n = 2400 if full else 900
+    eps = 2.0
+    data = synthetic.proteins(n, seed=0)
+    workers = [f"w{i}" for i in range(N_SHARDS)]
+
+    t0 = time.perf_counter()
+    fleet = ElasticIndex("levenshtein", data, workers, tight_bounds=True)
+    dt = time.perf_counter() - t0
+    full_build = fleet.eval_count()["build"]
+    out.append(row(
+        f"elastic_build_{N_SHARDS}shards", dt * 1e6 / n,
+        build_evals=full_build,
+        build_dispatches=sum(s.net.counter.build_dispatches
+                             for s in fleet.shards.values() if s),
+    ))
+
+    # -- stacked vs host-loop serving: parity, counts, speedup -------------
+    qs = mutate_queries(data, 6, seed=3)
+    want = [fleet.range_query(q, eps, batched=False) for q in qs]
+    loop_evals = fleet.eval_count()["query"]
+    got = fleet.range_query_batch(qs, eps)  # also warms the stacked jit
+    assert got == want, "stacked fleet serving must match the host loop"
+    dev0 = dict(fleet.device_stats)
+
+    t0 = time.perf_counter()
+    for q in qs:
+        fleet.range_query(q, eps, batched=False)
+    t_loop = (time.perf_counter() - t0) * 1e6 / len(qs)
+    t0 = time.perf_counter()
+    fleet.range_query_batch(qs, eps)
+    t_stacked = (time.perf_counter() - t0) * 1e6 / len(qs)
+    out.append(row(
+        f"elastic_query_loop_{N_SHARDS}shards", t_loop,
+        evals_frac=round(loop_evals / (len(qs) * n), 4),
+        hits=sum(len(h) for h in want),
+    ))
+    out.append(row(
+        f"elastic_query_stacked_{N_SHARDS}shards", t_stacked,
+        evals_frac=round(dev0["total_evals"] / (len(qs) * n), 4),
+        speedup=round(t_loop / max(t_stacked, 1e-9), 2),
+    ))
+
+    # -- resize gate: N -> N+1 (new worker builds, survivors shrink) -------
+    b0 = fleet.eval_count()["build"]
+    t0 = time.perf_counter()
+    frac_up = fleet.resize(workers + [f"w{N_SHARDS}"])
+    dt = (time.perf_counter() - t0) * 1e6
+    spent_up = fleet.eval_count()["build"] - b0
+    assert spent_up <= MAX_RESIZE_BUILD_FRAC * full_build, (
+        f"resize {N_SHARDS}->{N_SHARDS + 1} re-spent {spent_up} evals "
+        f"(> {MAX_RESIZE_BUILD_FRAC:.2f} x full build {full_build})")
+    out.append(row(
+        f"elastic_resize_{N_SHARDS}to{N_SHARDS + 1}", dt,
+        build_evals=spent_up, moved_frac=round(frac_up, 3),
+        build_frac=round(spent_up / full_build, 4),
+    ))
+
+    # -- resize gate: N+1 -> N (survivors grow through the cohort loader) --
+    b0 = fleet.eval_count()["build"]
+    t0 = time.perf_counter()
+    frac_down = fleet.resize(workers)
+    dt = (time.perf_counter() - t0) * 1e6
+    spent_down = fleet.eval_count()["build"] - b0
+    assert spent_down <= MAX_RESIZE_BUILD_FRAC * full_build, (
+        f"resize {N_SHARDS + 1}->{N_SHARDS} re-spent {spent_down} evals "
+        f"(> {MAX_RESIZE_BUILD_FRAC:.2f} x full build {full_build})")
+    out.append(row(
+        f"elastic_resize_{N_SHARDS + 1}to{N_SHARDS}", dt,
+        build_evals=spent_down, moved_frac=round(frac_down, 3),
+        build_frac=round(spent_down / full_build, 4),
+    ))
+
+    # round-tripped fleet serves the original hit sets, on both paths
+    assert fleet.range_query_batch(qs, eps) == want, \
+        "round-trip reshard lost exactness (stacked)"
+    assert [fleet.range_query(q, eps, batched=False) for q in qs] == want, \
+        "round-trip reshard lost exactness (host loop)"
+    return out

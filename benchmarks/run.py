@@ -23,6 +23,7 @@ MODULES = [
     ("query", "benchmarks.bench_query"),           # figs 8-11
     ("matching", "benchmarks.bench_matching"),     # fig 12 + types II/III
     ("device", "benchmarks.bench_device"),         # TPU-adapted mode
+    ("elastic", "benchmarks.bench_elastic"),       # fleet serving + resize
 ]
 
 

@@ -151,6 +151,20 @@ class CountedDistance:
         self.build_count = 0
         self.build_dispatches = 0
 
+    def extend(self, rows: np.ndarray) -> None:
+        """Append windows to the indexed database (accounting untouched).
+
+        Existing row indices stay valid — new windows land at the end — so
+        an index built over the old database can keep serving while fresh
+        content is bulk-loaded on top (the elastic layer's incremental
+        reshard path).  Callers holding a reference to ``.data`` must
+        re-read it after this call."""
+        rows = np.asarray(rows)
+        if len(rows) == 0:
+            return
+        self.data = np.concatenate([self.data, rows.astype(self.data.dtype)])
+        self.n = len(self.data)
+
     def eval(self, q: np.ndarray, idxs: Sequence[int],
              q_len: Optional[int] = None, *,
              bucket: str = QUERY) -> np.ndarray:

@@ -93,6 +93,30 @@ class FlatNet:
                 self.pivot_radius[p] = d
         return self
 
+    def remove(self, member_ids: Sequence[int]) -> "FlatNet":
+        """Mask windows out of every member list in place — zero distance
+        evaluations.
+
+        The elastic layer calls this when rendezvous resharding moves
+        windows *out* of a shard: the departed ids can never be reported as
+        hits again, while pivot rows stay behind as routing-only ghosts
+        (a pivot is just a stored vector, so it keeps partitioning the
+        survivors even after its own window left) and ``pivot_radius``
+        keeps its monotone upper-bound property untouched.
+        """
+        ids = np.asarray(list(member_ids), np.int64)
+        if ids.size == 0:
+            return self
+        drop = np.isin(self.members, ids) & (self.members >= 0)
+        masked = np.where(drop, -1, self.members)
+        # re-compact each row (live entries left, padding right): `append`
+        # writes at the first slot past the live count, so holes must not
+        # hide live members behind them
+        order = np.argsort(masked < 0, axis=1, kind="stable")
+        self.members = np.take_along_axis(masked, order, axis=1)
+        self.member_dist = np.take_along_axis(self.member_dist, order, axis=1)
+        return self
+
 
 def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
                 ) -> FlatNet:
@@ -175,9 +199,10 @@ def _batch_dist(dist_name: str, qs, xs, interpret=True):
     mode = _MODE_OF[dist_name]
     if mode is None:
         diff = qs.astype(jnp.float32) - xs.astype(jnp.float32)
-        while diff.ndim > 1:
-            diff = jnp.sum(diff * diff, -1)
-        return jnp.sqrt(jnp.maximum(diff, 0.0))
+        # one squared-difference sum over every non-batch axis (repeated
+        # sum-of-squares passes would re-square multi-dim windows)
+        d2 = jnp.sum(diff * diff, axis=tuple(range(1, diff.ndim)))
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
     from repro.kernels import ops
     return ops.wavefront(qs, xs, mode, interpret=interpret)
 
@@ -252,7 +277,10 @@ def _device_query_jit(qs, pivots, pradius, members, mem_valid, mem_dist,
     flat_need = need_eval.reshape(-1)
     n_need = jnp.sum(flat_need)
     sel = jnp.nonzero(flat_need, size=capacity, fill_value=0)[0]
-    valid_sel = flat_need[sel]
+    # jnp.nonzero pads with index 0; when flat_need[0] is genuinely true the
+    # padding aliases a real survivor, so validity must be positional (the
+    # first n_need rows are real), never looked up by value
+    valid_sel = jnp.arange(capacity) < n_need
     q_of = sel // (P * M)
     pm = sel % (P * M)
     w_of = members.reshape(-1)[pm]
@@ -282,8 +310,11 @@ def merge_flats(flats: Sequence[FlatNet]) -> Tuple[FlatNet, List[int]]:
     Shards partition the windows, so concatenating pivot rows (member ids
     offset into the concatenated data array, member widths padded to the
     fleet maximum) yields a FlatNet whose single device query equals the
-    union of the per-shard queries.  Returns the merged net plus each
-    shard's column offset into the merged hit mask.
+    union of the per-shard queries.  Pivot identities survive the merge —
+    ``pivot_ids`` concatenate with the same per-shard offsets, so post-merge
+    :meth:`FlatNet.append` refreshes keep working — when every input carries
+    them (otherwise the merged net's are None).  Returns the merged net plus
+    each shard's column offset into the merged hit mask.
     """
     assert flats, "nothing to merge"
     assert len({f.dist_name for f in flats}) == 1, "mixed distances"
@@ -297,6 +328,11 @@ def merge_flats(flats: Sequence[FlatNet]) -> Tuple[FlatNet, List[int]]:
         mems.append(np.where(mem >= 0, mem + off, -1))
         mdists.append(np.pad(f.member_dist, ((0, 0), (0, pad))))
         off += len(f.data)
+    pivot_ids = None
+    if all(f.pivot_ids is not None for f in flats):
+        pivot_ids = np.concatenate(
+            [np.asarray(f.pivot_ids, np.int64) + o
+             for f, o in zip(flats, offsets)])
     return FlatNet(
         pivots=np.concatenate([f.pivots for f in flats]),
         pivot_radius=np.concatenate([f.pivot_radius for f in flats]),
@@ -304,11 +340,12 @@ def merge_flats(flats: Sequence[FlatNet]) -> Tuple[FlatNet, List[int]]:
         member_dist=np.concatenate(mdists),
         data=np.concatenate([f.data for f in flats]),
         n_pivots=sum(f.n_pivots for f in flats),
-        dist_name=flats[0].dist_name), offsets
+        dist_name=flats[0].dist_name, pivot_ids=pivot_ids), offsets
 
 
 def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
                       *, dead: Tuple[int, ...] = (), stacked: bool = True,
+                      merged: Optional[Tuple[FlatNet, List[int]]] = None,
                       **kw):
     """Union of per-shard device queries (shards partition the windows).
 
@@ -327,13 +364,21 @@ def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
     purpose).  ``stacked=False`` keeps the per-shard loop with the
     classic per-shard stats (useful when shards genuinely live on
     different processes).
+
+    ``merged`` lets a serving layer pass a precomputed
+    ``merge_flats``-of-the-alive-shards result (net, offsets) so repeated
+    queries against an unchanged fleet skip the per-call merge; it MUST
+    correspond to the current alive list or the column slicing is wrong.
     """
     alive = [(i, f) for i, f in enumerate(flats) if i not in dead]
     results: List[Optional[np.ndarray]] = [None] * len(flats)
     stats: List[Optional[dict]] = [None] * len(flats)
     if stacked and len(alive) > 1:
-        merged, offsets = merge_flats([f for _, f in alive])
-        hits, s = device_range_query(merged, qs, eps, **kw)
+        if merged is not None:
+            mnet, offsets = merged
+        else:
+            mnet, offsets = merge_flats([f for _, f in alive])
+        hits, s = device_range_query(mnet, qs, eps, **kw)
         fleet = {"merged": True, "n_shards": len(alive),
                  "capacity": s["capacity"],
                  "fleet_pivot_evals": s["pivot_evals"],

@@ -143,6 +143,21 @@ class ReferenceNet:
             self.insert(i)
         return self
 
+    def extend_data(self, rows: np.ndarray) -> List[int]:
+        """Append fresh windows to the net's database without touching the
+        built structure; returns their new row indices.
+
+        The rows are *not* inserted — feed the returned indices to
+        :meth:`build_batched` (``order=new_ids``) to bulk-load them through
+        the cohort pipeline against the existing net.  This is the elastic
+        layer's reshard-in path: a shard that gains windows extends and
+        bulk-loads instead of rebuilding from scratch."""
+        rows = np.asarray(rows)
+        base = len(self.counter.data)
+        self.counter.extend(rows)
+        self.data = self.counter.data
+        return list(range(base, base + len(rows)))
+
     def insert(self, idx: int) -> None:
         """Insert object ``idx``: the sequential ``drive()`` of
         :meth:`insert_plan` — evaluation counts and the resulting structure

@@ -1,17 +1,58 @@
-"""Elastic scaling for the sharded retrieval fleet.
+"""Elastic scaling for the sharded retrieval fleet — on the batched substrate.
 
 Windows are assigned to shards by rendezvous (highest-random-weight)
 hashing: when the worker set changes, ONLY the windows whose owner changed
-move — each survivor keeps ~n/k of its data, so an N->N±1 resize rebuilds
+move — each survivor keeps ~n/k of its data, so an N->N±1 resize touches
 ~1/N of the index instead of all of it.  Each shard owns an independent
 reference net (metric-space partitioning keeps range queries exact by
 union; DESIGN.md §4.3).
+
+Since PR 3 the elastic layer is the fleet-serving front end of the batched
+substrate rather than a host-only wrapper:
+
+* **Construction** — every shard builds through
+  :meth:`~repro.core.refnet.ReferenceNet.build_batched` on a
+  caller-selected :class:`~repro.core.counter.CountedDistance` backend
+  (``numpy`` / ``jax`` / ``pallas``), and is immediately flattened
+  (:func:`~repro.core.distributed.flatten_net`) so it can serve device
+  queries.
+* **Resharding** — :meth:`ElasticIndex.resize` never rebuilds a surviving
+  shard from scratch.  Windows that rendezvous moves *out* are deleted from
+  the host net (Alg. 2 re-homing) and masked out of the shard's
+  :class:`~repro.core.distributed.FlatNet` with zero evaluations
+  (:meth:`FlatNet.remove`); windows that move *in* are appended to the
+  shard's database (:meth:`ReferenceNet.extend_data`), bulk-loaded through
+  the cohort loader (``build_batched(order=new_ids)``), and attached to the
+  flat net incrementally (:meth:`FlatNet.append`) under a pivot ancestor
+  found by walking the new node's parent chain.  Only a brand-new worker
+  (or the rare shard whose *root* window moved away) pays a full build, so
+  an N->N+1 resize re-spends ~1/N of the original ``build``-bucket cost
+  (gated in ``benchmarks/bench_elastic.py``).
+* **Serving** — :meth:`ElasticIndex.range_query` (``batched=True``, the
+  default) routes the whole fleet through
+  :func:`~repro.core.distributed.fleet_range_query`: the alive shards'
+  FlatNets are stacked by ``merge_flats`` into ONE device query per query
+  length bucket, and the resulting per-shard hit-mask columns are
+  translated back to global window ids through each shard's ``gids`` map.
+  ``dead`` workers map onto the fleet query's ``dead=`` shard mask, so a
+  lost worker degrades the answer to the union of the survivors (exact on
+  their partitions) until the caller ``resize``\\ s it away.
+  ``batched=False`` keeps the classic host per-shard pointer-chasing loop
+  — same hit sets, used as the parity oracle.
+
+Accounting: :meth:`ElasticIndex.eval_count` reports the fleet's host-side
+counter totals as separate ``{"query", "build"}`` buckets (construction
+and resharding land in ``build``, host-mode queries in ``query``; counts
+of retired shards are retained so both buckets are monotone across
+resizes), and :attr:`ElasticIndex.device_stats` accumulates the device
+path's pivot/member evaluation totals.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -41,65 +82,283 @@ def moved_fraction(before: Dict[str, List[int]], after: Dict[str, List[int]]
     return moved / max(len(owner_a), 1)
 
 
+@dataclasses.dataclass
+class _Shard:
+    """One worker's slice of the fleet: host net + device flat + id map.
+
+    ``gids[i]`` is the global window id stored at local row ``i`` of the
+    shard's database.  Rows are not recycled in place: a window that
+    reshards away leaves a stale row behind (masked out of both the net
+    and the flat), a window that reshards in appends a fresh row — so
+    local ids stay stable across incremental resizes, and ``resize``
+    compacts a shard (full rebuild) once stale rows outnumber live ones."""
+    net: "object"               # ReferenceNet over the shard-local database
+    flat: "object"              # FlatNet serving the device path
+    gids: np.ndarray            # (rows,) local row -> global window id
+
+
 class ElasticIndex:
-    """A set of per-shard reference nets that reshard incrementally."""
+    """A set of per-shard reference nets that reshard incrementally and
+    serve batched fleet queries as one stacked device query."""
 
     def __init__(self, dist_name: str, data: np.ndarray, workers: List[str],
-                 *, eps_prime: float = 1.0, tight_bounds: bool = True):
-        from repro.core.refnet import ReferenceNet
+                 *, eps_prime: float = 1.0, tight_bounds: bool = True,
+                 backend: str = "numpy", max_cohort: int = 256,
+                 interpret: bool = True):
         from repro.distances import get
         self.dist = get(dist_name)
         self.data = np.asarray(data)
         self.eps_prime = eps_prime
         self.tight = tight_bounds
+        self.backend = backend
+        self.max_cohort = max_cohort
+        self.interpret = interpret
         self.workers = list(workers)
         self.assignment = assign(range(len(data)), self.workers)
-        self._net_cls = ReferenceNet
-        self.shards = {w: self._build(w) for w in self.workers}
+        self._retired = {"query": 0, "build": 0}
+        self._merged = None     # (dead_ix, merge_flats result) serving cache
+        self.device_stats = {"pivot_evals": 0, "member_evals": 0,
+                             "total_evals": 0, "device_queries": 0}
+        self.shards: Dict[str, Optional[_Shard]] = {
+            w: self._build_shard(self.assignment[w]) for w in self.workers}
 
-    def _build(self, worker: str):
-        ids = self.assignment[worker]
-        if not ids:
+    # -- construction -------------------------------------------------------
+
+    def _build_shard(self, ids: Sequence[int]) -> Optional[_Shard]:
+        """Full cohort build of one shard on the selected backend."""
+        from repro.core.counter import CountedDistance
+        from repro.core.distributed import flatten_net
+        from repro.core.refnet import ReferenceNet
+        if not len(ids):
             return None
-        net = self._net_cls(self.dist, self.data[ids],
-                            eps_prime=self.eps_prime,
-                            tight_bounds=self.tight).build()
-        net._global_ids = list(ids)
-        return net
+        ids = np.asarray(ids, np.int64)
+        counter = CountedDistance(self.dist, self.data[ids],
+                                  backend=self.backend)
+        net = ReferenceNet(self.dist, counter.data,
+                           eps_prime=self.eps_prime,
+                           tight_bounds=self.tight, counter=counter)
+        net.build_batched(max_cohort=self.max_cohort)
+        return _Shard(net=net, flat=flatten_net(net), gids=ids)
+
+    def _retire(self, shard: _Shard) -> None:
+        """Fold a dropped/replaced shard's counters into the running totals
+        so ``eval_count`` buckets stay monotone across resizes."""
+        self._retired["query"] += shard.net.counter.count
+        self._retired["build"] += shard.net.counter.build_count
+
+    # -- elastic resharding -------------------------------------------------
 
     def resize(self, workers: List[str]) -> float:
-        """Change the worker set; rebuild only shards whose content moved.
-        Returns the fraction of windows that moved."""
+        """Change the worker set; reshard incrementally.
+
+        Surviving shards shrink (Alg.-2 deletes + zero-eval ``FlatNet``
+        masking) and/or grow (``extend_data`` + cohort bulk load +
+        ``FlatNet.append``); a full ``build_batched`` is paid only by
+        brand-new workers, the rare shard whose root window moved away,
+        and shards whose accumulated stale rows outnumber their live ones
+        (churn compaction).  Returns the fraction of windows that moved."""
         new_assign = assign(range(len(self.data)), workers)
         frac = moved_fraction(self.assignment, new_assign)
-        new_shards = {}
+        old_shards = self.shards
+        new_shards: Dict[str, Optional[_Shard]] = {}
         for w in workers:
-            if w in self.shards and new_assign[w] == self.assignment.get(w):
-                new_shards[w] = self.shards[w]  # untouched shard
-            else:
-                new_shards[w] = None            # content changed: rebuild
+            old = old_shards.get(w)
+            new_ids = new_assign[w]
+            if old is not None and new_ids == self.assignment.get(w):
+                new_shards[w] = old                     # untouched shard
+                continue
+            shard: Optional[_Shard] = None
+            if old is not None and new_ids:
+                old_set = set(self.assignment.get(w, ()))
+                new_set = set(new_ids)
+                lost = sorted(old_set - new_set)
+                gained = sorted(new_set - old_set)
+                # churn compaction, decided BEFORE spending any incremental
+                # work: if stale rows would outnumber live windows, a full
+                # rebuild is the cheaper (and smaller) shard
+                rows_after = len(old.gids) + len(gained)
+                live_after = len(old.net.nodes) - len(lost) + len(gained)
+                if live_after * 2 >= rows_after:
+                    shard = self._shrink(old, lost) if lost else old
+                    if shard is not None and gained:
+                        self._grow(shard, gained)
+            if shard is None and new_ids:
+                shard = self._build_shard(new_ids)  # new/root-loss/compaction
+            new_shards[w] = shard
+        carried = {id(s) for s in new_shards.values() if s is not None}
+        for s in old_shards.values():
+            if s is not None and id(s) not in carried:
+                self._retire(s)
         self.assignment = new_assign
         self.workers = list(workers)
-        for w in workers:
-            if new_shards[w] is None:
-                new_shards[w] = self._build(w)
         self.shards = new_shards
+        self._merged = None     # shard arrays changed: drop the serving cache
         return frac
 
+    def _shrink(self, shard: _Shard, lost: Sequence[int]
+                ) -> Optional[_Shard]:
+        """Remove windows that resharded away.  Host net: Alg.-2 deletion
+        (plain objects first, then references bottom-up, so a deleted
+        reference never re-homes a child that is itself leaving).  Flat
+        net: zero-eval member masking.  Returns None — full rebuild — only
+        when the shard's root window itself moved away."""
+        g2l = {int(g): i for i, g in enumerate(shard.gids)}
+        local = [g2l[int(g)] for g in lost]
+        net = shard.net
+        if net.root in local:
+            return None
+        objs = [x for x in local if net.nodes[x].level < 0]
+        refs = sorted((x for x in local if net.nodes[x].level >= 0),
+                      key=lambda x: net.nodes[x].level)
+        for x in objs + refs:
+            net.delete(x)
+        shard.flat.remove(local)
+        return shard
+
+    def _grow(self, shard: _Shard, gained: Sequence[int]) -> None:
+        """Bulk-load windows that resharded in: extend the shard database,
+        run the cohort loader over just the new ids, and attach each new
+        window to the flat net under a pivot ancestor (walking the parent
+        chain; link distances are reused where the pivot is the direct
+        parent, the rest are one stacked build-bucket dispatch)."""
+        gained = np.asarray(sorted(int(g) for g in gained), np.int64)
+        rows = self.data[gained]
+        net = shard.net
+        new_local = net.extend_data(rows)
+        shard.gids = np.concatenate([shard.gids, gained])
+        net.build_batched(order=new_local, max_cohort=self.max_cohort)
+        self._refresh_flat(shard, new_local, rows)
+
+    def _refresh_flat(self, shard: _Shard, new_local: Sequence[int],
+                      rows: np.ndarray) -> None:
+        flat, net = shard.flat, shard.net
+        pivot_row = {int(p): r
+                     for r, p in enumerate(np.asarray(flat.pivot_ids))}
+        prows: List[int] = []
+        dists: List[float] = []
+        need_l: List[int] = []
+        need_r: List[int] = []
+        need_at: List[int] = []
+        for x in new_local:
+            p = x
+            while p not in pivot_row:
+                p = net.nodes[p].parents[0]   # levels strictly increase
+            prows.append(pivot_row[p])
+            pn = net.nodes[p]
+            if x in pn.children:
+                dists.append(float(pn.child_dist[pn.children.index(x)]))
+            else:
+                need_l.append(p)
+                need_r.append(x)
+                need_at.append(len(dists))
+                dists.append(0.0)
+        if need_l:
+            ds = net.counter.eval_pairs(need_l, need_r)
+            for at, d in zip(need_at, ds):
+                dists[at] = float(d)
+        flat.append(prows, list(new_local), dists, new_data=rows)
+
+    # -- serving ------------------------------------------------------------
+
     def range_query(self, q: np.ndarray, eps: float,
-                    q_len=None, dead: Sequence[str] = ()) -> List[int]:
+                    q_len: Optional[int] = None, dead: Sequence[str] = (),
+                    *, batched: bool = True,
+                    capacity: Optional[int] = None) -> List[int]:
         """Fleet-wide query = union over shards (exact).  ``dead`` workers
         are skipped — results degrade gracefully and the caller can retry
-        after `resize` (fault tolerance path)."""
-        out: List[int] = []
-        for w in self.workers:
-            if w in dead or self.shards[w] is None:
-                continue
-            net = self.shards[w]
-            for local in net.range_query(q, eps, q_len):
-                out.append(net._global_ids[local])
-        return sorted(out)
+        after `resize` (fault tolerance path).
 
-    def eval_count(self) -> int:
-        return sum(s.counter.count for s in self.shards.values()
-                   if s is not None)
+        ``batched=True`` (default) serves through the stacked device fleet
+        query; ``batched=False`` is the host per-shard loop (same hits)."""
+        q = np.asarray(q)
+        qlen = len(q) if q_len is None else int(q_len)
+        if not batched:
+            out: List[int] = []
+            for w in self.workers:
+                s = self.shards.get(w)
+                if w in dead or s is None:
+                    continue
+                for local in s.net.range_query(q, eps, qlen):
+                    out.append(int(s.gids[local]))
+            return sorted(out)
+        return self.range_query_batch([q[:qlen]], eps, dead=dead,
+                                      capacity=capacity)[0]
+
+    def range_query_batch(self, qs: Union[np.ndarray, Sequence[np.ndarray]],
+                          eps: float, *, dead: Sequence[str] = (),
+                          capacity: Optional[int] = None) -> List[List[int]]:
+        """Batched fleet serving: ONE stacked device query per length
+        bucket, through ``merge_flats`` + ``fleet_range_query``.
+
+        ``qs`` is a (Q, l[, d]) array (one bucket) or a sequence of query
+        windows whose lengths may differ (bucketed by length).  Returns the
+        sorted global hit ids per query; ``dead`` workers map onto the
+        fleet query's ``dead=`` shard mask."""
+        from repro.core.distributed import fleet_range_query, merge_flats
+        rows = [np.asarray(q) for q in qs]
+        buckets: Dict[int, List[int]] = {}
+        for i, q in enumerate(rows):
+            buckets.setdefault(len(q), []).append(i)
+        flats = [self.shards[w].flat if self.shards.get(w) is not None
+                 else None for w in self.workers]
+        dead_ix = tuple(i for i, w in enumerate(self.workers)
+                        if w in dead or flats[i] is None)
+        # the merged fleet arrays only change on resize, so reuse them
+        # across queries instead of re-stacking the whole fleet per call
+        if self._merged is not None and self._merged[0] == dead_ix:
+            merged = self._merged[1]
+        else:
+            alive = [f for i, f in enumerate(flats) if i not in dead_ix]
+            merged = merge_flats(alive) if len(alive) > 1 else None
+            self._merged = (dead_ix, merged)
+        hits: List[set] = [set() for _ in rows]
+        for qlen in sorted(buckets):
+            sel = buckets[qlen]
+            qb = np.stack([rows[i] for i in sel])
+            res, stats = fleet_range_query(
+                flats, qb, eps, dead=dead_ix, stacked=True, merged=merged,
+                capacity=capacity, interpret=self.interpret)
+            self._note_stats(stats)
+            for i, w in enumerate(self.workers):
+                if res[i] is None:
+                    continue
+                gids = self.shards[w].gids
+                for k, qi in enumerate(sel):
+                    hits[qi].update(gids[np.flatnonzero(res[i][k])].tolist())
+        return [sorted(h) for h in hits]
+
+    def _note_stats(self, stats: Sequence[Optional[dict]]) -> None:
+        """Accumulate device-path evaluation totals (merged fleet stats are
+        shared dicts — counted once, not once per shard)."""
+        agg = self.device_stats
+        seen_merged = False
+        for st in stats:
+            if st is None:
+                continue
+            if st.get("merged"):
+                if seen_merged:
+                    continue
+                seen_merged = True
+                agg["pivot_evals"] += st["fleet_pivot_evals"]
+                agg["member_evals"] += st["fleet_member_evals"]
+                agg["total_evals"] += st["fleet_total_evals"]
+            else:
+                agg["pivot_evals"] += st["pivot_evals"]
+                agg["member_evals"] += st["member_evals"]
+                agg["total_evals"] += st["total_evals"]
+        agg["device_queries"] += 1
+
+    # -- accounting ---------------------------------------------------------
+
+    def eval_count(self) -> Dict[str, int]:
+        """Host-side counter totals by bucket: ``query`` (host-mode range
+        queries) and ``build`` (construction + resharding).  Retired shards'
+        counts are retained, so both buckets are monotone across resizes;
+        device-path evaluations are tracked in :attr:`device_stats`."""
+        out = dict(self._retired)
+        for s in self.shards.values():
+            if s is None:
+                continue
+            out["query"] += s.net.counter.count
+            out["build"] += s.net.counter.build_count
+        return out

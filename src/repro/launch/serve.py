@@ -51,32 +51,44 @@ def main():
         queries += rng.normal(scale=0.1, size=queries.shape).astype(
             queries.dtype)
 
+    # stacked device serving: the whole query batch is ONE fleet query
+    # (merge_flats + one device dispatch per length bucket)
     t0 = time.time()
-    n_hits = 0
-    for q in queries:
-        n_hits += len(fleet.range_query(q, args.eps))
+    batch_hits = fleet.range_query_batch(queries, args.eps)
     serve_s = time.time() - t0
+    n_hits = sum(len(h) for h in batch_hits)
+
+    # host per-shard loop: same hits, classic per-eval counting (the
+    # paper's pruning-ratio currency lives in the counter's query bucket)
+    t0 = time.time()
+    loop_hits = [fleet.range_query(q, args.eps, batched=False)
+                 for q in queries]
+    loop_s = time.time() - t0
+    assert batch_hits == loop_hits, "stacked serving must stay exact"
     evals = fleet.eval_count()
     naive = args.queries * len(data)
 
-    # straggler mitigation: shard 0 is slow -> its queries are re-issued
-    # against the replica fleet (here: a second ElasticIndex replica)
+    # straggler mitigation: shard 0 is slow -> it is masked `dead` in the
+    # stacked fleet query and its share re-issued against a replica
     replica = ElasticIndex(dist, data, workers, tight_bounds=True)
     t0 = time.time()
+    part_hits = fleet.range_query_batch(queries, args.eps,
+                                        dead=("worker0",))
+    rep = replica.shards["worker0"]
     stolen_hits = 0
-    for q in queries:
-        part = fleet.range_query(q, args.eps, dead=("worker0",))
-        # "steal" worker0's share from the replica
-        rep = replica.shards["worker0"]
-        extra = [rep._global_ids[i]
-                 for i in rep.range_query(q, args.eps)] if rep else []
-        stolen_hits += len(sorted(set(part) | set(extra)))
+    for part, q in zip(part_hits, queries):
+        extra = [int(rep.gids[i])
+                 for i in rep.net.range_query(q, args.eps)] if rep else []
+        stolen_hits += len(set(part) | set(extra))
     steal_s = time.time() - t0
     assert stolen_hits == n_hits, "work stealing must preserve exactness"
 
-    # elastic resize: drop one worker, verify exactness is preserved
+    # elastic resize: drop one worker, verify exactness is preserved and
+    # the incremental reshard cost lands in the build bucket
+    build_before = fleet.eval_count()["build"]
     frac = fleet.resize(workers[:-1])
-    n_hits2 = sum(len(fleet.range_query(q, args.eps)) for q in queries)
+    resize_evals = fleet.eval_count()["build"] - build_before
+    n_hits2 = sum(len(h) for h in fleet.range_query_batch(queries, args.eps))
     assert n_hits2 == n_hits, "resharding must preserve exactness"
 
     print(json.dumps({
@@ -86,11 +98,16 @@ def main():
         "batch_queries": args.queries,
         "serve_s": round(serve_s, 3),
         "qps": round(args.queries / serve_s, 1),
+        "loop_s": round(loop_s, 3),
+        "loop_qps": round(args.queries / loop_s, 1),
         "hits": n_hits,
-        "distance_evals": evals,
-        "evals_vs_naive": round(evals / naive, 4),
+        "query_evals": evals["query"],
+        "build_evals": evals["build"],
+        "device_evals": fleet.device_stats["total_evals"],
+        "evals_vs_naive": round(evals["query"] / naive, 4),
         "steal_s": round(steal_s, 3),
         "resize_moved_frac": round(frac, 3),
+        "resize_build_evals": resize_evals,
     }, indent=2))
 
 

@@ -148,6 +148,109 @@ def test_flatnet_append_stays_exact():
     np.testing.assert_array_equal(hits, host_reference_hits(flat, qs, 2.0))
 
 
+def _toy_flat():
+    """A 1-pivot FlatNet whose FIRST member slot needs an exact eval at
+    eps=2.5: q=(0,0), pivot=(3,0) (d=3, radius 2 -> undecided), member 0 is
+    window 1 at link distance 1 (ring bound [2,4] straddles eps)."""
+    data = np.asarray([[3.0, 0.0], [4.0, 0.0], [1.0, 0.0]], np.float32)
+    return FlatNet(
+        pivots=data[[0]], pivot_radius=np.asarray([2.0], np.float32),
+        members=np.asarray([[1, 0, 2]], np.int64),
+        member_dist=np.asarray([[1.0, 0.0, 2.0]], np.float32),
+        data=data, n_pivots=1, dist_name="euclidean",
+        pivot_ids=np.asarray([0], np.int64))
+
+
+def test_member_eval_stats_not_inflated_by_padding():
+    """Regression (PR 3): jnp.nonzero pads the survivor compaction with
+    index 0; when slot 0 genuinely needs evaluation the padding aliased it
+    and every padding row was counted as a member eval.  Validity is now
+    positional, so the stats report exactly the undecided survivors."""
+    flat = _toy_flat()
+    qs = np.zeros((1, 2), np.float32)
+    hits, stats = device_range_query(flat, qs, eps=2.5, capacity=16)
+    # slots: (w=1, ring [2,4]) -> eval; (w=0, lo=3) -> pruned free;
+    # (w=2, ring [1,5]) -> eval.  Padding must not count.
+    assert stats["member_evals"] == 2, stats
+    assert stats["total_evals"] == flat.n_pivots + 2
+    np.testing.assert_array_equal(hits, [[False, False, True]])
+
+
+def test_fleet_stats_parity_stacked_vs_loop_with_undecided_slot0():
+    """With the positional-validity fix, the merged fleet query's member
+    evals equal the sum of the per-shard loop's — even when the merged
+    net's survivor slot 0 is undecided (the aliasing trigger)."""
+    shard2_data = np.asarray([[6.0, 0.0], [5.0, 0.0]], np.float32)
+    shard2 = FlatNet(
+        pivots=shard2_data[[0]], pivot_radius=np.asarray([1.0], np.float32),
+        members=np.asarray([[1, 0]], np.int64),
+        member_dist=np.asarray([[1.0, 0.0]], np.float32),
+        data=shard2_data, n_pivots=1, dist_name="euclidean",
+        pivot_ids=np.asarray([0], np.int64))
+    flats = [_toy_flat(), shard2]
+    qs = np.zeros((1, 2), np.float32)
+    stacked, st = fleet_range_query(flats, qs, eps=2.5, stacked=True)
+    looped, lp = fleet_range_query(flats, qs, eps=2.5, stacked=False)
+    for s, l in zip(stacked, looped):
+        np.testing.assert_array_equal(s, l)
+    assert st[0]["fleet_member_evals"] == sum(x["member_evals"] for x in lp)
+    assert st[0]["fleet_total_evals"] == sum(x["total_evals"] for x in lp)
+
+
+def test_merge_flats_preserves_pivot_ids_with_offsets():
+    """Regression (PR 3): merge_flats dropped pivot_ids, so a merged net
+    could never be refreshed with FlatNet.append.  They now concatenate
+    with each shard's data offset applied, and post-merge appends keep
+    device queries exact."""
+    data = proteins(120, seed=21)
+    halves = np.array_split(np.arange(len(data)), 2)
+    flats = [flatten_net(_net(data[ix], "levenshtein", 1.0))
+             for ix in halves]
+    merged, offsets = merge_flats(flats)
+    want = np.concatenate([np.asarray(f.pivot_ids) + off
+                           for f, off in zip(flats, offsets)])
+    np.testing.assert_array_equal(merged.pivot_ids, want)
+    # post-merge append: attach a fresh window to pivot row 0 of shard 1
+    from repro.distances import np_backend
+    batch = np_backend.batch_for("levenshtein")
+    new = proteins(121, seed=22)[-1:]
+    prow = flats[0].n_pivots        # shard 1's first pivot row in the merge
+    pid = int(merged.pivot_ids[prow])
+    d = float(np.asarray(batch(new, merged.data[pid][None]))[0])
+    merged.append([prow], [len(merged.data)], [d], new_data=new)
+    qs = data[:3]
+    hits, _ = device_range_query(merged, qs, eps=2.0)
+    np.testing.assert_array_equal(hits, host_reference_hits(merged, qs, 2.0))
+
+
+def test_flatnet_remove_masks_members_and_keeps_append_exact():
+    """FlatNet.remove masks departed windows with zero evaluations (rows
+    re-compacted so later appends never overwrite live members), and the
+    shrunken net keeps serving exactly."""
+    from repro.distances import np_backend
+    data = proteins(140, seed=23)
+    flat = flatten_net(_net(data, "levenshtein", 1.0))
+    removed = [3, 10, 11, 57]
+    flat.remove(removed)
+    live = np.setdiff1d(flat.members[flat.members >= 0], [])
+    assert not set(removed) & set(live.tolist())
+    qs = data[:4]
+    hits, _ = device_range_query(flat, qs, eps=2.0)
+    want = host_reference_hits(flat, qs, 2.0)
+    want[:, removed] = False        # departed windows are never hits
+    np.testing.assert_array_equal(hits, want)
+    # append after remove: the compacted rows accept new members cleanly
+    batch = np_backend.batch_for("levenshtein")
+    new = proteins(141, seed=24)[-1:]
+    ds = np.asarray(batch(np.repeat(new, flat.n_pivots, 0), flat.pivots))
+    p = int(np.argmin(ds))
+    flat.append([p], [len(flat.data)], [float(ds[p])], new_data=new)
+    hits2, _ = device_range_query(flat, qs, eps=2.0)
+    want2 = host_reference_hits(flat, qs, 2.0)
+    want2[:, removed] = False
+    np.testing.assert_array_equal(hits2, want2)
+
+
 def test_matcher_flat_net_cache_respects_pivot_level():
     from repro.core.matching import SubsequenceMatcher
     rng = np.random.default_rng(15)

@@ -1,0 +1,144 @@
+"""Elastic fleet serving on the batched substrate: stacked-device vs
+host-loop hit parity across the metric distances, incremental resize
+parity vs full rebuild under worker add/remove/kill, and the
+``{query, build}`` accounting buckets across ``__init__``/``resize``."""
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import proteins, trajectories
+from repro.launch.elastic import ElasticIndex
+
+#: the four metric distances the indexed path supports (dtw is excluded by
+#: require_metric, exactly as in the build/bulk suites)
+CASES = [
+    ("levenshtein", proteins, 1.0, 2.0),
+    ("erp", trajectories, 0.5, 1.0),
+    ("frechet", trajectories, 0.25, 0.6),
+    ("euclidean", trajectories, 0.5, 1.5),
+]
+
+
+def _fleet(dist_name, gen, eps_prime, n=120, workers=("a", "b", "c"),
+           seed=7):
+    data = gen(n, seed=seed)
+    return data, ElasticIndex(dist_name, data, list(workers),
+                              eps_prime=eps_prime)
+
+
+@pytest.mark.parametrize("dist_name,gen,eps_prime,eps", CASES)
+def test_stacked_serving_matches_host_loop(dist_name, gen, eps_prime, eps):
+    """Acceptance: range_query(batched=True) routes one stacked device
+    query through merge_flats and returns hit sets identical to the host
+    per-shard pointer-chasing loop."""
+    data, fleet = _fleet(dist_name, gen, eps_prime)
+    qs = data[[3, 40, 77]]
+    want = [fleet.range_query(q, eps, batched=False) for q in qs]
+    assert fleet.range_query_batch(qs, eps) == want
+    # the single-query wrapper takes the same path
+    assert fleet.range_query(qs[0], eps) == want[0]
+    # the stacked run is device work, not host-counter work
+    assert fleet.device_stats["device_queries"] > 0
+    assert fleet.device_stats["total_evals"] > 0
+
+
+@pytest.mark.parametrize("dist_name,gen,eps_prime,eps", CASES[:2])
+def test_resize_parity_vs_full_rebuild(dist_name, gen, eps_prime, eps):
+    """Worker add (survivors shrink), remove (survivors grow), and a
+    round-trip must all serve exactly what a freshly built fleet serves —
+    on both the stacked and the host path."""
+    data, fleet = _fleet(dist_name, gen, eps_prime, n=150)
+    qs = data[[5, 60, 110]]
+    want = [fleet.range_query(q, eps, batched=False) for q in qs]
+
+    for new_workers in (["a", "b", "c", "d"],   # add: shards shed windows
+                        ["a", "c", "d"],        # swap: shed + gain
+                        ["a", "c"]):            # remove: survivors gain
+        frac = fleet.resize(new_workers)
+        assert 0.0 < frac < 1.0
+        fresh = ElasticIndex(dist_name, data, new_workers,
+                             eps_prime=eps_prime)
+        got_stacked = fleet.range_query_batch(qs, eps)
+        got_loop = [fleet.range_query(q, eps, batched=False) for q in qs]
+        got_fresh = [fresh.range_query(q, eps, batched=False) for q in qs]
+        assert got_stacked == want
+        assert got_loop == want
+        assert got_fresh == want
+
+
+def test_dead_worker_masking_degrades_to_survivor_union():
+    """`dead=` maps onto the stacked fleet query's dead-shard mask: the
+    answer is the exact union of the surviving shards' partitions, on both
+    paths, and a subsequent resize restores the full answer."""
+    data, fleet = _fleet("levenshtein", proteins, 1.0, n=150)
+    qs = data[[4, 90]]
+    full = fleet.range_query_batch(qs, 2.0)
+    dead_gids = set(fleet.assignment["b"])
+    for q, want_full in zip(qs, full):
+        expect = sorted(set(want_full) - dead_gids)
+        assert fleet.range_query(q, 2.0, dead=("b",)) == expect
+        assert fleet.range_query(q, 2.0, dead=("b",),
+                                 batched=False) == expect
+    # the kill path: resize the dead worker away, exactness returns
+    fleet.resize(["a", "c"])
+    assert fleet.range_query_batch(qs, 2.0) == full
+
+
+def test_eval_count_buckets_across_init_and_resize():
+    """The PR-3 accounting bugfix: construction and reshard cost lives in
+    the ``build`` bucket (previously read from the query counter and
+    silently reported 0 after PR 2), host queries in ``query``, and both
+    buckets are monotone across resizes even when shards are retired."""
+    data = proteins(120, seed=9)
+    fleet = ElasticIndex("levenshtein", data, ["a", "b"])
+    ec0 = fleet.eval_count()
+    assert ec0["build"] > 0 and ec0["query"] == 0
+
+    # device serving touches neither host bucket
+    fleet.range_query(data[0], 2.0)
+    assert fleet.eval_count() == ec0
+    assert fleet.device_stats["device_queries"] == 1
+
+    # host serving lands in the query bucket only
+    fleet.range_query(data[0], 2.0, batched=False)
+    ec1 = fleet.eval_count()
+    assert ec1["query"] > 0 and ec1["build"] == ec0["build"]
+
+    # resize cost lands in the build bucket only (the old bug: 0)
+    fleet.resize(["a", "b", "c"])
+    ec2 = fleet.eval_count()
+    assert ec2["build"] > ec1["build"]
+    assert ec2["query"] == ec1["query"]
+
+    # dropping a worker retires its counter without losing its history
+    fleet.resize(["a", "c"])
+    ec3 = fleet.eval_count()
+    assert ec3["build"] >= ec2["build"]
+    assert ec3["query"] == ec2["query"]
+
+
+def test_resize_is_incremental_not_full_rebuild():
+    """An N->N+1 resize must cost a fraction of the original build, not a
+    second full build (the bench gates 2/N at scale; the bound here is
+    looser because tiny shards amortise worse)."""
+    data = proteins(240, seed=11)
+    fleet = ElasticIndex("levenshtein", data, ["a", "b", "c"])
+    full_build = fleet.eval_count()["build"]
+    fleet.resize(["a", "b", "c", "d"])
+    spent = fleet.eval_count()["build"] - full_build
+    assert 0 < spent < full_build, (spent, full_build)
+
+
+def test_backend_selection_builds_identical_shards():
+    """Shard construction accepts any CountedDistance backend; numpy and
+    jax cohort builds serve identical hit sets."""
+    data = proteins(90, seed=13)
+    hits = []
+    for backend in ("numpy", "jax"):
+        fleet = ElasticIndex("levenshtein", data, ["a", "b"],
+                             backend=backend)
+        assert all(s.net.counter.backend == backend
+                   for s in fleet.shards.values() if s)
+        hits.append([fleet.range_query(q, 2.0, batched=False)
+                     for q in data[[2, 50]]])
+    assert hits[0] == hits[1]
