@@ -15,7 +15,7 @@ from repro.core.distributed import device_range_query, flatten_net
 from repro.core.refnet import ReferenceNet
 from repro.data import synthetic
 from repro.distances import get
-from repro.launch.elastic import ElasticIndex
+from repro.retrieval import RetrievalConfig, Retriever
 
 
 def run(full: bool = False):
@@ -56,27 +56,26 @@ def run(full: bool = False):
             rounds=engine.rounds,
         ))
 
-    # fleet: shards + resize (the dedicated elastic suite gates the counts;
-    # these rows track the device-suite view of the same paths)
-    fleet = ElasticIndex("levenshtein", data, [f"w{i}" for i in range(4)],
-                         tight_bounds=True)
+    # fleet: shards + resize through the facade (the dedicated elastic
+    # suite gates the counts; these rows track the device-suite view)
+    r = Retriever.build(
+        RetrievalConfig("levenshtein", execution="fleet", workers=4,
+                        tight_bounds=True), data)
     t0 = time.perf_counter()
-    for q in qs:
-        fleet.range_query(q, 2.0, batched=False)
+    loop = r.batch(qs).via("host").range(2.0)
     dt = (time.perf_counter() - t0) * 1e6 / len(qs)
     out.append(row("fleet_query_4shards", dt,
-                   evals=fleet.eval_count()["query"]))
-    fleet.range_query_batch(qs, 2.0)  # warm the stacked jit
-    dev0 = fleet.device_stats["total_evals"]
+                   evals=loop.stats["query"]))
+    r.batch(qs).range(2.0)  # warm the stacked jit
     t0 = time.perf_counter()
-    fleet.range_query_batch(qs, 2.0)
+    stacked = r.batch(qs).range(2.0)
     dt = (time.perf_counter() - t0) * 1e6 / len(qs)
     out.append(row("fleet_query_4shards_stacked", dt,
-                   device_evals=fleet.device_stats["total_evals"] - dev0))
-    build_before = fleet.eval_count()["build"]
+                   device_evals=stacked.stats["device_evals"]))
+    build_before = r.eval_stats()["build"]
     t0 = time.perf_counter()
-    frac = fleet.resize([f"w{i}" for i in range(5)])
+    frac = r.elastic().resize([f"w{i}" for i in range(5)])
     dt = (time.perf_counter() - t0) * 1e6
     out.append(row("fleet_resize_4to5", dt, moved_frac=round(frac, 3),
-                   build_evals=fleet.eval_count()["build"] - build_before))
+                   build_evals=r.eval_stats()["build"] - build_before))
     return out

@@ -31,7 +31,7 @@ import numpy as np
 
 from benchmarks.common import mutate_queries, row
 from repro.data import synthetic
-from repro.launch.elastic import ElasticIndex
+from repro.retrieval import RetrievalConfig, Retriever
 
 #: an N->N+1 (or N+1->N) resize may re-spend at most this fraction of the
 #: original full-build evaluations (acceptance bound: 2/N for N=4 shards)
@@ -47,9 +47,12 @@ def run(full: bool = False):
     workers = [f"w{i}" for i in range(N_SHARDS)]
 
     t0 = time.perf_counter()
-    fleet = ElasticIndex("levenshtein", data, workers, tight_bounds=True)
+    r = Retriever.build(
+        RetrievalConfig("levenshtein", execution="fleet", workers=workers,
+                        tight_bounds=True), data)
     dt = time.perf_counter() - t0
-    full_build = fleet.eval_count()["build"]
+    fleet = r.elastic().index
+    full_build = r.eval_stats()["build"]
     out.append(row(
         f"elastic_build_{N_SHARDS}shards", dt * 1e6 / n,
         build_evals=full_build,
@@ -59,18 +62,19 @@ def run(full: bool = False):
 
     # -- stacked vs host-loop serving: parity, counts, speedup -------------
     qs = mutate_queries(data, 6, seed=3)
-    want = [fleet.range_query(q, eps, batched=False) for q in qs]
-    loop_evals = fleet.eval_count()["query"]
-    got = fleet.range_query_batch(qs, eps)  # also warms the stacked jit
-    assert got == want, "stacked fleet serving must match the host loop"
+    loop_rs = r.batch(qs).via("host").range(eps)
+    want = loop_rs.hits
+    loop_evals = loop_rs.stats["query"]
+    stacked_rs = r.batch(qs).range(eps)  # also warms the stacked jit
+    assert stacked_rs.hits == want, \
+        "stacked fleet serving must match the host loop"
     dev0 = dict(fleet.device_stats)
 
     t0 = time.perf_counter()
-    for q in qs:
-        fleet.range_query(q, eps, batched=False)
+    r.batch(qs).via("host").range(eps)
     t_loop = (time.perf_counter() - t0) * 1e6 / len(qs)
     t0 = time.perf_counter()
-    fleet.range_query_batch(qs, eps)
+    r.batch(qs).range(eps)
     t_stacked = (time.perf_counter() - t0) * 1e6 / len(qs)
     out.append(row(
         f"elastic_query_loop_{N_SHARDS}shards", t_loop,
@@ -84,11 +88,11 @@ def run(full: bool = False):
     ))
 
     # -- resize gate: N -> N+1 (new worker builds, survivors shrink) -------
-    b0 = fleet.eval_count()["build"]
+    b0 = r.eval_stats()["build"]
     t0 = time.perf_counter()
-    frac_up = fleet.resize(workers + [f"w{N_SHARDS}"])
+    frac_up = r.elastic().resize(workers + [f"w{N_SHARDS}"])
     dt = (time.perf_counter() - t0) * 1e6
-    spent_up = fleet.eval_count()["build"] - b0
+    spent_up = r.eval_stats()["build"] - b0
     assert spent_up <= MAX_RESIZE_BUILD_FRAC * full_build, (
         f"resize {N_SHARDS}->{N_SHARDS + 1} re-spent {spent_up} evals "
         f"(> {MAX_RESIZE_BUILD_FRAC:.2f} x full build {full_build})")
@@ -99,11 +103,11 @@ def run(full: bool = False):
     ))
 
     # -- resize gate: N+1 -> N (survivors grow through the cohort loader) --
-    b0 = fleet.eval_count()["build"]
+    b0 = r.eval_stats()["build"]
     t0 = time.perf_counter()
-    frac_down = fleet.resize(workers)
+    frac_down = r.elastic().resize(workers)
     dt = (time.perf_counter() - t0) * 1e6
-    spent_down = fleet.eval_count()["build"] - b0
+    spent_down = r.eval_stats()["build"] - b0
     assert spent_down <= MAX_RESIZE_BUILD_FRAC * full_build, (
         f"resize {N_SHARDS + 1}->{N_SHARDS} re-spent {spent_down} evals "
         f"(> {MAX_RESIZE_BUILD_FRAC:.2f} x full build {full_build})")
@@ -114,8 +118,8 @@ def run(full: bool = False):
     ))
 
     # round-tripped fleet serves the original hit sets, on both paths
-    assert fleet.range_query_batch(qs, eps) == want, \
+    assert r.batch(qs).range(eps).hits == want, \
         "round-trip reshard lost exactness (stacked)"
-    assert [fleet.range_query(q, eps, batched=False) for q in qs] == want, \
+    assert r.batch(qs).via("host").range(eps).hits == want, \
         "round-trip reshard lost exactness (host loop)"
     return out

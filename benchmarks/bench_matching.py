@@ -1,6 +1,8 @@
 """Paper Fig. 12 + §7 — end-to-end subsequence matching: unique matching
 windows vs consecutive (>=2 chained) windows as eps grows, plus type-II/III
-query latency through the full 5-step pipeline."""
+query latency through the full 5-step pipeline — built and queried through
+the ``repro.retrieval`` facade (the matcher underneath is count-identical
+to the direct path)."""
 
 from __future__ import annotations
 
@@ -9,8 +11,8 @@ import time
 import numpy as np
 
 from benchmarks.common import row
-from repro.core.matching import SubsequenceMatcher
 from repro.data import synthetic
+from repro.retrieval import RetrievalConfig, Retriever
 
 
 def run(full: bool = False):
@@ -18,15 +20,14 @@ def run(full: bool = False):
     lam, l0 = 40, 2          # l = 20, the paper's window size
     n_seqs = 40 if full else 12
     seqs = synthetic.protein_sequences(n_seqs, length=400, seed=0)
-    m = SubsequenceMatcher("levenshtein", lam, l0, index="refnet",
-                           tight_bounds=True, num_max=5).build(seqs)
-    n_windows = len(m.meta)
-    rng = np.random.default_rng(3)
-    # queries: mutated fragments of the database (so matches exist)
-    base = seqs[0]
+    r = Retriever.build(
+        RetrievalConfig("levenshtein", lam=lam, lambda0=l0, index="refnet",
+                        tight_bounds=True, num_max=5), seqs)
+    m = r.matcher   # step-4 internals (segment_hits) for the fig-12 curves
+    n_windows = len(r.meta)
     Q = np.concatenate([seqs[1][37:37 + 60], seqs[2][100:160]])
     for eps in [1.0, 2.0, 4.0, 8.0, 12.0]:
-        m.reset_counter()
+        r.reset_counter()
         t0 = time.perf_counter()
         hits = m.segment_hits(Q, eps)
         dt = (time.perf_counter() - t0) * 1e6
@@ -48,14 +49,14 @@ def run(full: bool = False):
             evals_frac=round(m.eval_count / (n_windows * max(
                 1, sum(1 for _ in hits) or 1)), 6) if hits else 0.0,
         ))
-    # type II / III end-to-end latency
+    # type II / III end-to-end latency through the fluent plan API
     t0 = time.perf_counter()
-    best = m.query_longest(Q, 4.0)
+    best = r.query(Q).longest(4.0).first
     us2 = (time.perf_counter() - t0) * 1e6
     out.append(row("type2_longest_latency", us2,
                    q_len=best.q_len if best else 0))
     t0 = time.perf_counter()
-    near = m.query_nearest(Q, eps_max=12.0)
+    near = r.query(Q).nearest(12.0).first
     us3 = (time.perf_counter() - t0) * 1e6
     out.append(row("type3_nearest_latency", us3,
                    distance=round(near.distance, 2) if near else -1))

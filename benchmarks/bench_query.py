@@ -2,65 +2,61 @@
 naive scan for RN / RN-5 / RN-tight / CT / MV-5 / MV-50 across range sizes,
 on PROTEINS (Levenshtein), SONGS (DFD), TRAJ (ERP + DFD).
 
-Each (eps, index) cell is measured twice:
+Since PR 4 every cell runs through the ``repro.retrieval`` facade — one
+``RetrievalConfig`` per index variant, count-identical to the direct
+substrate calls it replaced — and each (eps, index) cell is measured twice:
 
-* host mode  — the classic per-query sequential traversal (one backend
-  dispatch per frontier of one query);
-* engine     — the batched frontier engine (``core/batch_engine.py``)
-  driving ALL queries' plans together, one ``Distance.batch`` dispatch per
-  merged round.
+* host mode  — ``.via("host")``: the classic per-query sequential traversal
+  (one backend dispatch per frontier of one query);
+* engine     — ``.via("batched")``: the batched frontier engine
+  (``core/batch_engine.py``) driving ALL queries' plans together, one
+  ``Distance.batch`` dispatch per merged round.
 
 Exact-evaluation counts are identical by construction (asserted); the
 ``dispatches`` column shows the Python-level dispatch collapse and
 ``speedup`` the resulting wall-clock ratio.  ``*_lb`` rows additionally
-enable the lower-bound cascade (pruned exact DPs; hit sets unchanged).
+enable the lower-bound cascade (``.lb()``: pruned exact DPs; hit sets
+unchanged).
 """
 
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import mutate_queries, row
-from repro.core.batch_engine import BatchEngine
-from repro.core.covertree import CoverTree
-from repro.core.refindex import MVReferenceIndex
-from repro.core.refnet import ReferenceNet
-from repro.data import synthetic
-from repro.distances import get
+from repro.retrieval import RetrievalConfig, Retriever
 
 
-def _indices(dist_name, data, eps_prime):
-    dist = get(dist_name)
-    return {
-        "rn": ReferenceNet(dist, data, eps_prime=eps_prime).build(),
-        "rn5": ReferenceNet(dist, data, eps_prime=eps_prime,
-                            num_max=5).build(),
-        "rn_tight": ReferenceNet(dist, data, eps_prime=eps_prime,
-                                 num_max=5, tight_bounds=True).build(),
-        "ct": CoverTree(dist, data, eps_prime=eps_prime).build(),
-        "mv5": MVReferenceIndex(dist, data, n_refs=5).build(),
-        "mv50": MVReferenceIndex(dist, data, n_refs=50).build(),
+def _retrievers(dist_name, data, eps_prime):
+    # bulk_build=False keeps the historical sequential-insert structure the
+    # checked-in count baselines were recorded against
+    base = RetrievalConfig(dist_name, eps_prime=eps_prime, bulk_build=False)
+    configs = {
+        "rn": base,
+        "rn5": base.replace(num_max=5),
+        "rn_tight": base.replace(num_max=5, tight_bounds=True),
+        "ct": base.replace(index="covertree"),
+        "mv5": base.replace(index="mv", mv_refs=5),
+        "mv50": base.replace(index="mv", mv_refs=50),
     }
+    return {k: Retriever.build(cfg, data) for k, cfg in configs.items()}
 
 
 def _sweep(name, dist_name, data, eps_prime, ranges, n_queries, out,
            lb_labels=("rn_tight",)):
-    idx = _indices(dist_name, data, eps_prime)
+    idx = _retrievers(dist_name, data, eps_prime)
     qs = mutate_queries(data, n_queries, seed=2)
     N = len(data)
     for eps in ranges:
         base = None
-        for label, net in idx.items():
+        for label, r in idx.items():
             # host mode: per-query sequential traversal
-            net.counter.reset()
+            r.reset_counter()
             t0 = time.perf_counter()
-            host_res = [net.range_query(q, eps) for q in qs]
+            host = r.batch(qs).via("host").range(eps)
             host_dt = (time.perf_counter() - t0) * 1e6 / n_queries
-            host_evals, host_disp = net.counter.count, net.counter.dispatches
-            hits = sum(len(r) for r in host_res)
-            frac = host_evals / (n_queries * N)
+            hits = sum(len(h) for h in host.hits)
+            frac = host.stats["query"] / (n_queries * N)
             if base is None:
                 base = hits
             assert hits == base, f"{label} disagrees at eps={eps}"
@@ -68,45 +64,42 @@ def _sweep(name, dist_name, data, eps_prime, ranges, n_queries, out,
                 f"{name}_eps{eps}_{label}", host_dt,
                 evals_frac=round(frac, 4),
                 hits_per_query=round(hits / n_queries, 1),
-                dispatches=host_disp,
+                dispatches=host.stats["dispatches"],
             ))
 
             # batched frontier engine: all queries, one dispatch per round
-            net.counter.reset()
-            engine = BatchEngine(net.counter)
+            r.reset_counter()
             t0 = time.perf_counter()
-            eng_res = engine.run(
-                [net.range_query_plan(eps) for _ in qs], qs, eps)
+            eng = r.batch(qs).via("batched").range(eps)
             eng_dt = (time.perf_counter() - t0) * 1e6 / n_queries
-            assert eng_res == host_res, f"{label} engine mismatch eps={eps}"
-            assert net.counter.count == host_evals, \
+            assert eng.hits == host.hits, f"{label} engine mismatch eps={eps}"
+            assert eng.stats["query"] == host.stats["query"], \
                 f"{label} engine eval-count drift eps={eps}"
             out.append(row(
                 f"{name}_eps{eps}_{label}_engine", eng_dt,
                 evals_frac=round(frac, 4),
-                dispatches=net.counter.dispatches,
-                rounds=engine.rounds,
+                dispatches=eng.stats["dispatches"],
+                rounds=eng.stats["rounds"],
                 speedup=round(host_dt / max(eng_dt, 1e-9), 2),
             ))
 
             # LB cascade on top of the engine (subset: it changes counts)
             if label in lb_labels:
-                net.counter.reset()
-                casc = BatchEngine(net.counter, lb_cascade=True)
+                r.reset_counter()
                 t0 = time.perf_counter()
-                lb_res = casc.run(
-                    [net.range_query_plan(eps) for _ in qs], qs, eps)
+                lbr = r.batch(qs).via("batched").lb().range(eps)
                 lb_dt = (time.perf_counter() - t0) * 1e6 / n_queries
-                assert lb_res == host_res, f"{label} lb mismatch eps={eps}"
+                assert lbr.hits == host.hits, f"{label} lb mismatch eps={eps}"
                 out.append(row(
                     f"{name}_eps{eps}_{label}_engine_lb", lb_dt,
-                    evals_frac=round(net.counter.count / (n_queries * N), 4),
-                    lb_evals=net.counter.lb_count,
+                    evals_frac=round(lbr.stats["query"] / (n_queries * N), 4),
+                    lb_evals=lbr.stats["lb"],
                     speedup=round(host_dt / max(lb_dt, 1e-9), 2),
                 ))
 
 
 def run(full: bool = False):
+    from repro.data import synthetic
     out = []
     n = 4000 if full else 1200
     nq = 20 if full else 8

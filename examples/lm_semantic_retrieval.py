@@ -10,10 +10,11 @@ import argparse
 
 import numpy as np
 
-from repro.core.embedding_retrieval import EmbeddingRetriever, embed_windows
+from repro.core.embedding_retrieval import embed_windows
 from repro.data.pipeline import TokenBatcher
 from repro.data.synthetic import token_corpus
 from repro.models import registry
+from repro.retrieval import RetrievalConfig, Retriever
 from repro.train import optimizer as opt_lib
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -49,16 +50,18 @@ def main():
     seqs.append(dup)
 
     vecs, meta = embed_windows(mod, out["params"], cfg, seqs, window=16)
-    ret = EmbeddingRetriever(vecs, meta, eps_prime=0.02)
+    ret = Retriever.build(
+        RetrievalConfig("euclidean", index="embedding", eps_prime=0.02,
+                        num_max=5, tight_bounds=True), vecs)
     probe = next(i for i, m in enumerate(meta) if m.seq_id == len(seqs) - 1)
-    hit = ret.nearest(vecs[probe])
-    assert hit is not None
-    win, d = hit
+    near = ret.query(vecs[probe]).nearest(2.0, tol=1e-3)
+    assert near, "the probe must retrieve something"
+    win, d = meta[near.first], near.distances[0]
     print(f"near-duplicate window retrieved: seq {win.seq_id} "
           f"@{win.start} (d={d:.4f}) for probe from seq {len(seqs)-1}")
-    others = ret.query(vecs[probe], eps=0.5)
+    others = ret.query(vecs[probe]).range(0.5)
     print(f"{len(others)} windows within eps=0.5; "
-          f"evals={ret.counter.count} vs naive={len(vecs)}")
+          f"evals={ret.eval_stats()['query']} vs naive={len(vecs)}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,16 @@
-"""Quickstart: the paper's 5-step subsequence matching framework end-to-end.
+"""Quickstart: the paper's 5-step subsequence matching framework end-to-end,
+through the unified `repro.retrieval` facade.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Builds a reference-net-indexed matcher over synthetic protein sequences,
-plants a mutated fragment into a query, and runs all three query types.
+One declarative config selects distance, index, and execution; the fluent
+query-plan API answers all three paper query types (§3.2).
 """
 
 import numpy as np
 
-from repro.core.matching import SubsequenceMatcher
 from repro.data.synthetic import protein_sequences
+from repro.retrieval import RetrievalConfig, Retriever
 
 LAM, LAMBDA0, EPS = 16, 1, 2.0
 
@@ -24,27 +25,28 @@ def main():
     Q[31] = (Q[31] + 1) % 20
     Q[48] = (Q[48] + 7) % 20
 
-    m = SubsequenceMatcher("levenshtein", LAM, LAMBDA0, index="refnet",
-                           tight_bounds=True, num_max=5).build(seqs)
-    print(f"indexed {len(m.meta)} windows of length {m.l} "
+    config = RetrievalConfig("levenshtein", lam=LAM, lambda0=LAMBDA0,
+                             index="refnet", tight_bounds=True, num_max=5)
+    r = Retriever.build(config, seqs)
+    print(f"indexed {len(r.meta)} windows of length {r.matcher.l} "
           f"from {len(seqs)} sequences")
 
-    m.reset_counter()
-    pairs = m.query_range(Q, EPS)
-    print(f"\n[type I] range query eps={EPS}: {len(pairs)} similar pairs "
-          f"({m.eval_count} distance evals)")
-    for p in pairs[:5]:
+    rs = r.query(Q).range(EPS)
+    print(f"\n[type I] range query eps={EPS}: {len(rs)} similar pairs "
+          f"({rs.stats['query']} distance evals, "
+          f"{rs.stats['dispatches']} dispatches)")
+    for p in rs.hits[:5]:
         print(f"  seq {p.seq_id} [{p.x_start}:{p.x_start+p.x_len}] ~ "
               f"Q[{p.q_start}:{p.q_start+p.q_len}] d={p.distance:.0f}")
 
-    best = m.query_longest(Q, EPS)
+    best = r.query(Q).longest(EPS).first
     print(f"\n[type II] longest similar subsequence: "
           f"seq {best.seq_id} [{best.x_start}:{best.x_start+best.x_len}] ~ "
           f"Q[{best.q_start}:{best.q_start+best.q_len}] "
           f"(|SQ|={best.q_len}, d={best.distance:.0f})")
     assert best.q_len >= 30, "planted 40-token match should dominate"
 
-    near = m.query_nearest(Q, eps_max=10.0)
+    near = r.query(Q).nearest(10.0).first
     print(f"\n[type III] nearest pair: d={near.distance:.0f} at "
           f"seq {near.seq_id} [{near.x_start}:{near.x_start+near.x_len}]")
 

@@ -1,14 +1,16 @@
 """Time-series scenario (paper §8 TRAJ): sub-trajectory retrieval under the
 discrete Frechet distance and ERP — including DTW via the consistency-only
-path (linear-scan filter, since DTW is not a metric; paper §5).
+path (linear-scan filter, since DTW is not a metric; paper §5).  The facade
+config validates the distance/index pairing at construction: asking for
+DTW on a metric index raises before any work is done.
 
   PYTHONPATH=src python examples/trajectory_search.py
 """
 
 import numpy as np
 
-from repro.core.matching import SubsequenceMatcher
 from repro.data.synthetic import trajectories
+from repro.retrieval import RetrievalConfig, Retriever
 
 
 def main():
@@ -20,14 +22,22 @@ def main():
     # query: a noisy replay of part of trajectory 2
     Q = seqs[2][30:90] + rng.normal(scale=0.05, size=(60, 2))
 
+    # DTW is consistent but not metric: the config layer rejects the
+    # indexed path and accepts the linear-scan filter (paper §5)
+    try:
+        RetrievalConfig("dtw", lam=16, index="refnet")
+    except ValueError as e:
+        print(f"config validation: {e}\n")
+
     for dist_name, eps, index in [("frechet", 0.4, "refnet"),
                                   ("erp", 3.0, "refnet"),
                                   ("dtw", 2.0, "linear")]:
-        m = SubsequenceMatcher(dist_name, lam=16, lambda0=1, index=index,
-                               tight_bounds=(index == "refnet")).build(seqs)
-        m.reset_counter()
-        best = m.query_longest(Q, eps)
-        n_windows = len(m.meta)
+        cfg = RetrievalConfig(dist_name, lam=16, lambda0=1, index=index,
+                              tight_bounds=(index == "refnet"))
+        r = Retriever.build(cfg, seqs)
+        rs = r.query(Q).longest(eps)
+        best = rs.first
+        n_windows = len(r.meta)
         note = "(metric index)" if index == "refnet" else \
             "(consistent but non-metric -> linear-scan filter)"
         if best is None:
@@ -36,7 +46,7 @@ def main():
         print(f"{dist_name:8s} eps={eps}: traj {best.seq_id} "
               f"[{best.x_start}:{best.x_start+best.x_len}] ~ "
               f"Q[{best.q_start}:{best.q_start+best.q_len}] "
-              f"d={best.distance:.2f}  evals={m.eval_count} "
+              f"d={best.distance:.2f}  evals={rs.stats['query']} "
               f"/ naive~{n_windows * 3 * len(Q)} {note}")
         assert best.seq_id == 2, "should recover the replayed trajectory"
 

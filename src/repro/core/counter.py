@@ -61,42 +61,21 @@ def _pad_pow2(n: int) -> int:
 def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
     """A ``(xs, ys, lx, ly) -> (B,) np.ndarray`` batch function."""
     if backend == "numpy":
-        return np_backend.batch_for(dist.name)
+        try:
+            return np_backend.batch_for(dist.name)
+        except KeyError:
+            # third-party distance: no hand-written numpy wavefront —
+            # fall back to the registry's own (jitted) batch callable
+            return _registry_batch(dist)
     if backend == "jax":
-        import jax.numpy as jnp
-
-        def jax_batch(xs, ys, lx=None, ly=None):
-            xs, ys = np.asarray(xs), np.asarray(ys)
-            if len(xs) == 0:
-                return np.zeros((0,), np.float32)
-            L = max(xs.shape[1], ys.shape[1])
-
-            def pad_len(a):
-                if a.shape[1] == L:
-                    return a
-                w = [(0, 0), (0, L - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
-                return np.pad(a, w)
-
-            lx = np.full(len(xs), xs.shape[1]) if lx is None else np.asarray(lx)
-            ly = np.full(len(ys), ys.shape[1]) if ly is None else np.asarray(ly)
-            B = len(xs)
-            P = _pad_pow2(B)
-            xs, ys = pad_len(xs), pad_len(ys)
-            if P != B:  # pad batch with row 0 so shapes recompile rarely
-                pad = P - B
-                xs = np.concatenate([xs, xs[:1].repeat(pad, 0)])
-                ys = np.concatenate([ys, ys[:1].repeat(pad, 0)])
-                lx = np.concatenate([lx, lx[:1].repeat(pad)])
-                ly = np.concatenate([ly, ly[:1].repeat(pad)])
-            out = np.asarray(dist.batch(xs, ys, jnp.asarray(lx),
-                                        jnp.asarray(ly)))
-            return out[:B]
-
-        return jax_batch
+        return _registry_batch(dist)
     if backend == "pallas":
         mode = _PALLAS_MODE.get(dist.name)
-        if mode is None:  # euclidean / hamming: no wavefront; numpy is exact
-            return np_backend.batch_for(dist.name)
+        if mode is None:  # euclidean / hamming / third-party: no wavefront
+            try:
+                return np_backend.batch_for(dist.name)
+            except KeyError:
+                return _registry_batch(dist)
         from repro.kernels import ops
 
         def pallas_batch(xs, ys, lx=None, ly=None):
@@ -126,6 +105,41 @@ def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
 
         return pallas_batch
     raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+
+
+def _registry_batch(dist: dist_base.Distance) -> Callable:
+    """Wrap the registry's ``Distance.batch`` (row-padded, pow2-batched so
+    jit recompilations stay rare) as a host-callable batch function."""
+    import jax.numpy as jnp
+
+    def jax_batch(xs, ys, lx=None, ly=None):
+        xs, ys = np.asarray(xs), np.asarray(ys)
+        if len(xs) == 0:
+            return np.zeros((0,), np.float32)
+        L = max(xs.shape[1], ys.shape[1])
+
+        def pad_len(a):
+            if a.shape[1] == L:
+                return a
+            w = [(0, 0), (0, L - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
+            return np.pad(a, w)
+
+        lx = np.full(len(xs), xs.shape[1]) if lx is None else np.asarray(lx)
+        ly = np.full(len(ys), ys.shape[1]) if ly is None else np.asarray(ly)
+        B = len(xs)
+        P = _pad_pow2(B)
+        xs, ys = pad_len(xs), pad_len(ys)
+        if P != B:  # pad batch with row 0 so shapes recompile rarely
+            pad = P - B
+            xs = np.concatenate([xs, xs[:1].repeat(pad, 0)])
+            ys = np.concatenate([ys, ys[:1].repeat(pad, 0)])
+            lx = np.concatenate([lx, lx[:1].repeat(pad)])
+            ly = np.concatenate([ly, ly[:1].repeat(pad)])
+        out = np.asarray(dist.batch(xs, ys, jnp.asarray(lx),
+                                    jnp.asarray(ly)))
+        return out[:B]
+
+    return jax_batch
 
 
 class CountedDistance:

@@ -18,10 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.counter import CountedDistance
-from repro.core.refnet import ReferenceNet
 from repro.core.segmentation import Window
-from repro.distances import get
 from repro.models.layers import Ctx, NOCTX
 
 
@@ -53,40 +50,41 @@ def embed_windows(model, params, cfg, token_seqs: Sequence[np.ndarray],
 
 
 class EmbeddingRetriever:
-    """Reference net over pooled hidden-state windows (Euclidean)."""
+    """Reference net over pooled hidden-state windows (Euclidean).
+
+    Deprecated as a *direct* public entry point — this is now a thin shim
+    over the facade's ``index='embedding'`` kind::
+
+        Retriever.build(RetrievalConfig("euclidean", index="embedding",
+                                        eps_prime=..., num_max=5,
+                                        tight_bounds=True), vectors)
+    """
 
     def __init__(self, vectors: np.ndarray, meta: List[Window], *,
                  eps_prime: float = 0.05, num_max: Optional[int] = 5,
                  tight_bounds: bool = True):
+        from repro.core import _deprecation
+        from repro.retrieval import RetrievalConfig, Retriever
+        _deprecation.warn_legacy("EmbeddingRetriever")
         self.meta = meta
-        dist = get("euclidean")
-        # each "sequence" is one pooled vector: (N, d) -> length-d series? no:
-        # treat each vector as a length-1 sequence of d-dim elements so the
-        # registry distance applies; equivalently plain L2 over (N, d).
-        self.counter = CountedDistance(dist, vectors[:, None, :])
+        # each vector is a length-1 sequence of d-dim elements so the
+        # registry distance applies (the facade's "embedding" data prep);
         # bulk-loaded: embedding corpora are built in one shot, so the
         # cohort loader's dispatch collapse applies directly
-        self.net = ReferenceNet(dist, vectors[:, None, :],
-                                eps_prime=eps_prime, num_max=num_max,
-                                tight_bounds=tight_bounds,
-                                counter=self.counter).build_batched()
+        self.retriever = Retriever.build(
+            RetrievalConfig("euclidean", index="embedding",
+                            eps_prime=eps_prime, num_max=num_max,
+                            tight_bounds=tight_bounds), np.asarray(vectors))
+        self.net = self.retriever.index
+        self.counter = self.net.counter
 
     def query(self, vec: np.ndarray, eps: float) -> List[Tuple[Window, int]]:
-        hits = self.net.range_query(vec[None, :], eps)
+        hits = self.retriever.query(vec).range(eps)
         return [(self.meta[i], i) for i in hits]
 
     def nearest(self, vec: np.ndarray, eps_max: float = 2.0,
                 tol: float = 1e-3):
-        lo, hi = 0.0, eps_max
-        if not self.query(vec, hi):
+        rs = self.retriever.query(vec).nearest(eps_max, tol=tol)
+        if not rs:
             return None
-        while hi - lo > tol:
-            mid = 0.5 * (lo + hi)
-            if self.query(vec, mid):
-                hi = mid
-            else:
-                lo = mid
-        hits = self.query(vec, hi)
-        ds = self.counter.eval(vec[None, :], [i for _, i in hits])
-        best = int(np.argmin(ds))
-        return hits[best][0], float(ds[best])
+        return self.meta[rs.first], rs.distances[0]

@@ -22,16 +22,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import batch_engine
+from repro.core import _deprecation, batch_engine
 from repro.core import segmentation as seg
 from repro.core.counter import CountedDistance
-from repro.core.covertree import CoverTree
-from repro.core.refindex import MVReferenceIndex
-from repro.core.refnet import ReferenceNet
 from repro.distances import base as dist_base
 from repro.distances import np_backend
 
@@ -62,9 +59,12 @@ class LinearScanIndex:
     """Counted linear scan over all windows — the naive baseline, and the
     only legal path for consistent-but-non-metric distances (DTW, §5)."""
 
-    def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
+    def __init__(self, dist: Union[str, dist_base.Distance],
+                 data: np.ndarray, *,
                  counter: Optional[CountedDistance] = None):
-        self.counter = counter or CountedDistance(dist, data)
+        dist = dist_base.resolve(dist)
+        self.dist = dist
+        self.counter = counter or CountedDistance(self.dist, data)
         self.data = self.counter.data
 
     def build(self):
@@ -82,23 +82,35 @@ class LinearScanIndex:
         return sorted(int(i) for i in np.nonzero(np.asarray(ds) <= eps)[0])
 
 
-INDEXES = {
-    "refnet": ReferenceNet,
-    "covertree": CoverTree,
-    "mv": MVReferenceIndex,
-    "linear": LinearScanIndex,
-}
+@dataclasses.dataclass(frozen=True)
+class _IndexTuning:
+    """Config-shaped view over the matcher's index knobs, so the registry's
+    per-kind ``tuning`` mapping is the single source of constructor kwargs
+    for both the matcher and the facade."""
+    eps_prime: float
+    num_max: Optional[int]
+    tight_bounds: bool
+    mv_refs: int
 
 
 class SubsequenceMatcher:
-    def __init__(self, dist_name: str, lam: int, lambda0: int = 1, *,
+    """The 5-step pipeline.  Deprecated as a *direct* public entry point —
+    build through ``repro.retrieval.Retriever`` instead; the facade
+    delegates here, so behavior and counts are identical."""
+
+    def __init__(self, dist: Union[str, dist_base.Distance], lam: int,
+                 lambda0: int = 1, *,
                  index: str = "refnet", eps_prime: float = 1.0,
                  num_max: Optional[int] = None, tight_bounds: bool = False,
                  mv_refs: int = 5, backend: str = "numpy",
-                 lb_cascade: bool = False, batched: bool = True):
-        self.dist = dist_base.require_consistent(dist_name)
-        if index != "linear":
-            dist_base.require_metric(dist_name)
+                 lb_cascade: bool = False, batched: bool = True,
+                 bulk_build: bool = True):
+        _deprecation.warn_legacy("SubsequenceMatcher")
+        from repro.retrieval import registry as retrieval_registry
+        self.dist = dist_base.require_consistent(dist)
+        self.index_spec = retrieval_registry.resolve_index(index)
+        if self.index_spec.requires_metric:
+            dist_base.require_metric(self.dist)
         self.lam = lam
         self.lambda0 = lambda0
         self.l = seg.window_length(lam)
@@ -106,14 +118,12 @@ class SubsequenceMatcher:
         self.backend = backend
         self.lb_cascade = lb_cascade
         self.batched = batched  # False = legacy per-segment host traversal
-        self.index_kwargs: Dict = {}
-        if index in ("refnet", "covertree"):
-            self.index_kwargs = dict(eps_prime=eps_prime)
-            if index == "refnet":
-                self.index_kwargs.update(num_max=num_max,
-                                         tight_bounds=tight_bounds)
-        elif index == "mv":
-            self.index_kwargs = dict(n_refs=mv_refs)
+        self.bulk_build = bulk_build
+        # registry tuning: constructor kwargs are derived from one
+        # config-shaped view, the same mapping the facade uses
+        self.index_kwargs: Dict = dict(self.index_spec.tuning(
+            _IndexTuning(eps_prime=eps_prime, num_max=num_max,
+                         tight_bounds=tight_bounds, mv_refs=mv_refs)))
         self.seqs: List[np.ndarray] = []
         self.windows: Optional[np.ndarray] = None
         self.meta: List[seg.Window] = []
@@ -138,10 +148,9 @@ class SubsequenceMatcher:
         self.windows, self.meta = seg.partition_windows(self.seqs, self.lam)
         counter = CountedDistance(self.dist, self.windows,
                                   backend=self.backend)
-        cls = INDEXES[self.index_kind]
-        index = cls(self.dist, self.windows, counter=counter,
-                    **self.index_kwargs)
-        if self.index_kind in ("refnet", "covertree"):
+        index = self.index_spec.factory(self.dist, self.windows,
+                                        counter=counter, **self.index_kwargs)
+        if self.index_spec.bulk and self.bulk_build:
             self.index = index.build_batched()
         else:
             self.index = index.build()

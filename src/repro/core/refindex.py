@@ -23,12 +23,12 @@ from repro.distances import base as dist_base
 
 
 class MVReferenceIndex:
-    def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
+    def __init__(self, dist, data: np.ndarray, *,
                  n_refs: int = 5, sample: int = 256, seed: int = 0,
                  counter: Optional[CountedDistance] = None):
-        dist_base.require_metric(dist.name)
-        self.dist = dist
-        self.counter = counter or CountedDistance(dist, data)
+        # registry name or Distance instance, interchangeably
+        self.dist = dist_base.require_metric(dist)
+        self.counter = counter or CountedDistance(self.dist, data)
         self.data = self.counter.data
         self.n_refs = n_refs
         self._rng = np.random.default_rng(seed)

@@ -98,16 +98,16 @@ class ReferenceNet:
         tighter, same O(n) space).
     """
 
-    def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
+    def __init__(self, dist, data: np.ndarray, *,
                  eps_prime: float = 1.0, num_max: Optional[int] = None,
                  tight_bounds: bool = False,
                  counter: Optional[CountedDistance] = None):
-        dist_base.require_metric(dist.name)
-        self.dist = dist
+        # registry name or Distance instance, interchangeably
+        self.dist = dist_base.require_metric(dist)
         self.eps_prime = float(eps_prime)
         self.num_max = num_max
         self.tight_bounds = tight_bounds
-        self.counter = counter or CountedDistance(dist, data)
+        self.counter = counter or CountedDistance(self.dist, data)
         self.data = self.counter.data
         self.nodes: Dict[int, Node] = {}
         self.root: Optional[int] = None

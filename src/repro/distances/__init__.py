@@ -1,1 +1,3 @@
-from repro.distances.base import Distance, get, names, require_consistent, require_metric  # noqa: F401
+from repro.distances.base import (  # noqa: F401
+    Distance, get, names, register, resolve, require_consistent,
+    require_metric)

@@ -32,7 +32,7 @@ the query radius.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Union
 
 import jax.numpy as jnp
 
@@ -100,28 +100,41 @@ def names():
     return sorted(_REGISTRY)
 
 
-def require_metric(name: str) -> Distance:
+def resolve(dist: Union[str, Distance]) -> Distance:
+    """Accept a registry name or a ``Distance`` instance interchangeably.
+
+    Every index / facade constructor funnels its ``dist`` argument through
+    here, so callers never have to care which form they hold.  An instance
+    that was never registered is returned as-is (third-party distances can
+    be used without touching the global registry).
+    """
+    if isinstance(dist, Distance):
+        return dist
+    return get(dist)
+
+
+def require_metric(dist: Union[str, Distance]) -> Distance:
     """Fetch a distance for use inside a metric index (paper §5, §6).
 
     Raises if the distance does not obey the triangle inequality — e.g. DTW,
     which the paper explicitly excludes from the indexed path.
     """
-    d = get(name)
+    d = resolve(dist)
     if not d.metric:
         raise ValueError(
-            f"distance {name!r} is not a metric; the reference net / cover "
+            f"distance {d.name!r} is not a metric; the reference net / cover "
             "tree / MV index require metricity (paper §5). Use the "
             "segmentation filter with a linear scan instead."
         )
     return d
 
 
-def require_consistent(name: str) -> Distance:
+def require_consistent(dist: Union[str, Distance]) -> Distance:
     """Fetch a distance for use with the segmentation filter (Lemmas 1-3)."""
-    d = get(name)
+    d = resolve(dist)
     if not d.consistent:
         raise ValueError(
-            f"distance {name!r} is not consistent; the segmentation filter "
+            f"distance {d.name!r} is not consistent; the segmentation filter "
             "requires consistency (paper Def. 1)."
         )
     return d

@@ -99,14 +99,21 @@ class _Shard:
 
 class ElasticIndex:
     """A set of per-shard reference nets that reshard incrementally and
-    serve batched fleet queries as one stacked device query."""
+    serve batched fleet queries as one stacked device query.
 
-    def __init__(self, dist_name: str, data: np.ndarray, workers: List[str],
+    Deprecated as a *direct* public entry point — build through
+    ``repro.retrieval.Retriever`` with ``execution='fleet'`` instead; the
+    facade delegates here, so behavior and counts are identical.
+    ``dist`` accepts a registry name or a ``Distance`` instance."""
+
+    def __init__(self, dist, data: np.ndarray, workers: List[str],
                  *, eps_prime: float = 1.0, tight_bounds: bool = True,
                  backend: str = "numpy", max_cohort: int = 256,
                  interpret: bool = True):
-        from repro.distances import get
-        self.dist = get(dist_name)
+        from repro.core import _deprecation
+        from repro.distances import base as dist_base
+        _deprecation.warn_legacy("ElasticIndex")
+        self.dist = dist_base.require_metric(dist)
         self.data = np.asarray(data)
         self.eps_prime = eps_prime
         self.tight = tight_bounds

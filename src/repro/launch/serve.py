@@ -4,26 +4,57 @@ subsequence-retrieval fleet answering batched queries.
   PYTHONPATH=src python -m repro.launch.serve --dataset proteins \
       --n-windows 2000 --shards 4 --queries 32 --eps 2.0
 
-Builds per-shard reference nets (elastic, rendezvous-hashed), answers a
-batch of range + type-II/III queries, reports pruning ratios and latency,
-and exercises the straggler-work-stealing path with a simulated slow shard.
+  # or declaratively: the whole retrieval stack from one JSON config
+  PYTHONPATH=src python -m repro.launch.serve --config fleet.json
+
+``--config path.json`` deserializes straight into
+:class:`~repro.retrieval.RetrievalConfig` (the file is exactly
+``RetrievalConfig.to_json()`` output) and replaces the ad-hoc retrieval
+flags (``--distance`` / ``--shards``); dataset and query-load flags stay.
+The driver builds the fleet through the :class:`~repro.retrieval.Retriever`
+facade, answers a batch of range queries on the stacked device path,
+cross-checks the host per-shard loop, exercises dead-worker masking with a
+replica work-steal, and resizes the fleet down one worker — printing
+latency, pruning, and ``{query, build}`` accounting as JSON.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 
 import numpy as np
 
-from repro.core.matching import SubsequenceMatcher
 from repro.data import synthetic
-from repro.launch.elastic import ElasticIndex
+from repro.retrieval import RetrievalConfig, Retriever
+
+
+def build_config(args) -> RetrievalConfig:
+    """``--config path.json`` round-trips the declarative config; otherwise
+    the legacy flags assemble the same dataclass."""
+    if args.config:
+        cfg = RetrievalConfig.from_json(
+            pathlib.Path(args.config).read_text())
+        if cfg.execution != "fleet":
+            raise SystemExit(
+                f"serve.py drives a fleet; config has "
+                f"execution={cfg.execution!r}")
+        return cfg
+    _, default_dist = synthetic.DATASETS[args.dataset]
+    return RetrievalConfig(
+        distance=args.distance or default_dist or "erp",
+        execution="fleet",
+        workers=[f"worker{i}" for i in range(args.shards)],
+        tight_bounds=True)
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None,
+                    help="path to a RetrievalConfig JSON (to_json output); "
+                         "replaces --distance/--shards")
     ap.add_argument("--dataset", default="proteins",
                     choices=["proteins", "songs", "traj"])
     ap.add_argument("--distance", default=None)
@@ -33,15 +64,15 @@ def main():
     ap.add_argument("--eps", type=float, default=2.0)
     args = ap.parse_args()
 
-    gen, default_dist = synthetic.DATASETS[args.dataset]
-    dist = args.distance or default_dist or "erp"
+    config = build_config(args)
+    gen, _ = synthetic.DATASETS[args.dataset]
     data = gen(args.n_windows, seed=0)
     rng = np.random.default_rng(1)
 
-    workers = [f"worker{i}" for i in range(args.shards)]
     t0 = time.time()
-    fleet = ElasticIndex(dist, data, workers, tight_bounds=True)
+    fleet = Retriever.build(config, data)
     build_s = time.time() - t0
+    workers = fleet.elastic().workers
 
     queries = data[rng.integers(0, len(data), args.queries)].copy()
     if data.dtype.kind == "i":
@@ -54,27 +85,25 @@ def main():
     # stacked device serving: the whole query batch is ONE fleet query
     # (merge_flats + one device dispatch per length bucket)
     t0 = time.time()
-    batch_hits = fleet.range_query_batch(queries, args.eps)
+    batch_hits = fleet.batch(queries).range(args.eps)
     serve_s = time.time() - t0
     n_hits = sum(len(h) for h in batch_hits)
 
     # host per-shard loop: same hits, classic per-eval counting (the
     # paper's pruning-ratio currency lives in the counter's query bucket)
     t0 = time.time()
-    loop_hits = [fleet.range_query(q, args.eps, batched=False)
-                 for q in queries]
+    loop_hits = fleet.batch(queries).via("host").range(args.eps)
     loop_s = time.time() - t0
-    assert batch_hits == loop_hits, "stacked serving must stay exact"
-    evals = fleet.eval_count()
+    assert batch_hits.hits == loop_hits.hits, "stacked serving must stay exact"
+    evals = fleet.eval_stats()
     naive = args.queries * len(data)
 
     # straggler mitigation: shard 0 is slow -> it is masked `dead` in the
     # stacked fleet query and its share re-issued against a replica
-    replica = ElasticIndex(dist, data, workers, tight_bounds=True)
+    replica = Retriever.build(config, data)
     t0 = time.time()
-    part_hits = fleet.range_query_batch(queries, args.eps,
-                                        dead=("worker0",))
-    rep = replica.shards["worker0"]
+    part_hits = fleet.batch(queries).dead(workers[0]).range(args.eps)
+    rep = replica.elastic().index.shards[workers[0]]
     stolen_hits = 0
     for part, q in zip(part_hits, queries):
         extra = [int(rep.gids[i])
@@ -85,15 +114,16 @@ def main():
 
     # elastic resize: drop one worker, verify exactness is preserved and
     # the incremental reshard cost lands in the build bucket
-    build_before = fleet.eval_count()["build"]
-    frac = fleet.resize(workers[:-1])
-    resize_evals = fleet.eval_count()["build"] - build_before
-    n_hits2 = sum(len(h) for h in fleet.range_query_batch(queries, args.eps))
+    build_before = fleet.eval_stats()["build"]
+    frac = fleet.elastic().resize(workers[:-1])
+    resize_evals = fleet.eval_stats()["build"] - build_before
+    n_hits2 = sum(len(h) for h in fleet.batch(queries).range(args.eps))
     assert n_hits2 == n_hits, "resharding must preserve exactness"
 
     print(json.dumps({
-        "dataset": args.dataset, "distance": dist,
-        "windows": len(data), "shards": args.shards,
+        "dataset": args.dataset, "distance": config.dist.name,
+        "config": config.to_dict(),
+        "windows": len(data), "shards": len(workers),
         "build_s": round(build_s, 2),
         "batch_queries": args.queries,
         "serve_s": round(serve_s, 3),
@@ -103,7 +133,7 @@ def main():
         "hits": n_hits,
         "query_evals": evals["query"],
         "build_evals": evals["build"],
-        "device_evals": fleet.device_stats["total_evals"],
+        "device_evals": fleet.elastic().device_stats["total_evals"],
         "evals_vs_naive": round(evals["query"] / naive, 4),
         "steal_s": round(steal_s, 3),
         "resize_moved_frac": round(frac, 3),

@@ -1,0 +1,15 @@
+"""`repro.retrieval` — the canonical entry point to the framework.
+
+One declarative :class:`RetrievalConfig`, one :class:`Retriever` facade
+over every index kind and execution engine (host / batched frontier
+engine / elastic fleet), with pluggable registries for third-party
+distances and indexes.  See ``facade.py`` for the query-plan API.
+"""
+
+from repro.retrieval.config import EXECUTIONS, RetrievalConfig  # noqa: F401
+from repro.retrieval.facade import (  # noqa: F401
+    ElasticHandle, QueryPlan, ResultSet, Retriever)
+from repro.retrieval.registry import (  # noqa: F401
+    IndexSpec, distance_names, index_names, register_distance,
+    register_index, resolve_distance, resolve_index, unregister_distance,
+    unregister_index)

@@ -1,0 +1,177 @@
+"""`RetrievalConfig` — ONE declarative description of a retrieval stack.
+
+The paper's pitch is genericity: one framework, any consistent distance,
+any workload.  This dataclass is where *what* (distance, query scope) and
+*how* (index kind, counter backend, execution policy) meet, validated once
+at construction instead of scattered across five constructors' keyword
+lists:
+
+=============  =============================================================
+field          meaning
+=============  =============================================================
+distance       registry name (or ``Distance`` instance) — §4 consistency /
+               metricity requirements are checked here
+lam, lambda0   subsequence-matching scope (§3.2).  ``lam=None`` = plain
+               window-level retrieval over the database rows; ``lam`` set =
+               the full 5-step matching pipeline
+index          index kind from the retrieval registry
+               (``refnet|covertree|mv|linear|embedding|...``)
+execution      ``host`` (sequential frontier drive, classic counts),
+               ``batched`` (PR-1 frontier engine, one dispatch per merged
+               round), ``fleet`` (PR-3 elastic sharded serving)
+backend        counter backend: ``numpy | jax | pallas``
+lb_cascade     screen verdict frontiers with registered lower bounds
+workers        fleet worker names (or an int count); fleet execution only
+eps_prime,     index tuning knobs (reference-net radii / parent cap /
+num_max,       exact-vs-Lemma-4 bounds / MV reference count)
+tight_bounds,
+mv_refs
+bulk_build     build hierarchies through the PR-2 cohort loader (default);
+               ``False`` = sequential Alg.-1 inserts (legacy counts)
+max_cohort     cohort size cap for the bulk loader / fleet shard builds
+interpret      run Pallas kernels in interpret mode (off-TPU)
+=============  =============================================================
+
+``to_json`` / ``from_json`` round-trip the config so serving configs are
+checkable artifacts (``launch/serve.py --config path.json``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple, Union
+
+from repro.core.counter import BACKENDS
+from repro.distances import base as dist_base
+from repro.retrieval import registry
+
+EXECUTIONS = ("host", "batched", "fleet")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalConfig:
+    distance: Union[str, dist_base.Distance]
+    lam: Optional[int] = None
+    lambda0: int = 1
+    index: str = "refnet"
+    execution: str = "batched"
+    backend: str = "numpy"
+    lb_cascade: bool = False
+    workers: Optional[Tuple[str, ...]] = None
+    eps_prime: float = 1.0
+    num_max: Optional[int] = None
+    tight_bounds: bool = False
+    mv_refs: int = 5
+    bulk_build: bool = True
+    max_cohort: int = 256
+    interpret: bool = True
+
+    # -- validation (the whole point: fail at construction, not mid-query) --
+
+    def __post_init__(self):
+        if isinstance(self.workers, int):
+            object.__setattr__(
+                self, "workers",
+                tuple(f"w{i}" for i in range(self.workers)))
+        elif self.workers is not None:
+            object.__setattr__(self, "workers", tuple(self.workers))
+
+        dist = dist_base.resolve(self.distance)   # raises on unknown names
+        spec = registry.resolve_index(self.index)  # raises on unknown kinds
+        if self.execution not in EXECUTIONS:
+            raise ValueError(
+                f"execution must be one of {EXECUTIONS}; "
+                f"got {self.execution!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}; got {self.backend!r}")
+
+        if self.lam is not None:
+            if self.lam < 2:
+                raise ValueError(f"lam must be >= 2; got {self.lam}")
+            if not 0 <= self.lambda0 < self.lam // 2:
+                raise ValueError(
+                    f"lambda0 must satisfy 0 <= lambda0 < lam/2 "
+                    f"(= {self.lam // 2}); got {self.lambda0}")
+            dist_base.require_consistent(dist)   # segmentation filter, Def. 1
+            if self.index == "embedding":
+                raise ValueError(
+                    "index 'embedding' serves fixed-length pooled vectors; "
+                    "it cannot back the subsequence-matching pipeline "
+                    "(set lam=None)")
+        if spec.requires_metric:
+            dist_base.require_metric(dist)       # indexed path, §5
+
+        if self.execution == "fleet":
+            if not self.workers:
+                raise ValueError(
+                    "fleet execution needs workers (a name tuple or count)")
+            if self.lam is not None:
+                raise ValueError(
+                    "fleet execution serves window-level range queries; "
+                    "the matching pipeline (lam) runs host/batched")
+            if self.index != "refnet":
+                raise ValueError(
+                    "fleet execution shards per-worker reference nets; "
+                    f"index must be 'refnet', got {self.index!r}")
+            if self.lb_cascade:
+                raise ValueError(
+                    "lb_cascade applies to the host/batched frontier "
+                    "engine, not the stacked fleet path")
+        elif self.workers is not None:
+            raise ValueError(
+                f"workers only apply to fleet execution "
+                f"(execution={self.execution!r})")
+
+    # -- resolution helpers --------------------------------------------------
+
+    @property
+    def dist(self) -> dist_base.Distance:
+        return dist_base.resolve(self.distance)
+
+    @property
+    def index_spec(self) -> registry.IndexSpec:
+        return registry.resolve_index(self.index)
+
+    def replace(self, **changes) -> "RetrievalConfig":
+        return dataclasses.replace(self, **changes)
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        dist = self.dist
+        if isinstance(self.distance, dist_base.Distance):
+            # an instance serializes by name, so the name must round-trip
+            # back to the SAME distance when the JSON is loaded
+            try:
+                registered = dist_base.get(dist.name) is dist
+            except KeyError:
+                registered = False
+            if not registered:
+                raise ValueError(
+                    f"distance {dist.name!r} is not in the registry; "
+                    "register it (repro.retrieval.register_distance) "
+                    "before serializing this config")
+        d["distance"] = dist.name
+        if self.workers is not None:
+            d["workers"] = list(self.workers)
+        return d
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RetrievalConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(
+                f"unknown RetrievalConfig fields: {sorted(extra)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RetrievalConfig":
+        return cls.from_dict(json.loads(s))
