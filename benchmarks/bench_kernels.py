@@ -1,0 +1,129 @@
+"""Device-kernel substrate benchmark — the dispatch-collapse and fused-ε
+gates for the unified kernel registry.
+
+Three deterministic properties (count metrics, compared strict in CI
+against ``BENCH_kernels.json``):
+
+* **Packed round dispatch** — at the ``bench_query`` workload size, a
+  ragged query batch (segment lengths spread over ``2*lambda0 + 1``
+  buckets, §5) must cost ONE backend dispatch per engine round, not one
+  per round per bucket: the packed path is gated at >= 2x fewer
+  dispatches than per-bucket driving (in practice ~ the bucket count).
+* **Fused ε prune rate** — the device query path's survivor evaluation
+  returns hit masks from the kernel; rows certified ``> eps`` on an early
+  diagonal never materialize distances.  The *unpruned* fraction is the
+  count metric (a rise means the fused certificate weakened).
+* **Trace discipline** — repeating a shape-stable sweep must compile
+  nothing new (``traces`` stays 0); the registry owns one jit cache for
+  every caller.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mutate_queries, row
+from repro.core.distributed import (device_range_query, flatten_net,
+                                    host_reference_hits)
+from repro.core.refnet import ReferenceNet
+from repro.kernels import ops, registry
+from repro.retrieval import RetrievalConfig, Retriever
+
+
+def run(full: bool = False):
+    from repro.data import synthetic
+    out = []
+    n = 4000 if full else 1200
+    nq = 20 if full else 8
+    eps = 2.0
+    data = synthetic.proteins(n, seed=0)
+
+    # -- packed vs per-bucket dispatch at the bench_query workload size ----
+    r = Retriever.build(
+        RetrievalConfig("levenshtein", eps_prime=1.0, bulk_build=False),
+        data)
+    rng = np.random.default_rng(2)
+    qs_full = mutate_queries(data, nq, seed=2)
+    l = data.shape[1]
+    lens = rng.integers(l - 2, l + 3, nq)   # lambda0=2-style length spread
+    qs = [q[:ln] for q, ln in zip(qs_full, lens)]
+    n_buckets = len(set(int(x) for x in lens))
+
+    r.reset_counter()
+    t0 = time.perf_counter()
+    packed = r.batch(qs).via("batched").range(eps)
+    packed_dt = (time.perf_counter() - t0) * 1e6 / nq
+    packed_disp = packed.stats["dispatches"]
+
+    r.reset_counter()
+    t0 = time.perf_counter()
+    bucket_disp = 0
+    bucket_hits = {}
+    for ln in sorted(set(int(x) for x in lens)):
+        sel = [i for i in range(nq) if lens[i] == ln]
+        res = r.batch([qs[i] for i in sel]).via("batched").range(eps)
+        bucket_disp += res.stats["dispatches"]
+        for i, h in zip(sel, res.hits):
+            bucket_hits[i] = h
+    bucket_dt = (time.perf_counter() - t0) * 1e6 / nq
+    assert packed.hits == [bucket_hits[i] for i in range(nq)], \
+        "packed dispatch changed hit sets"
+    assert packed_disp * 2 <= bucket_disp, (
+        f"packed path saved < 2x dispatches "
+        f"({packed_disp} vs {bucket_disp} across {n_buckets} buckets)")
+    out.append(row(
+        "kernels_packed_round_dispatch", packed_dt,
+        dispatches=packed_disp, rounds=packed.stats["rounds"],
+        buckets=n_buckets,
+        dispatch_collapse=round(bucket_disp / max(packed_disp, 1), 2)))
+    out.append(row(
+        "kernels_per_bucket_dispatch", bucket_dt, dispatches=bucket_disp))
+
+    # -- fused-ε prune rate on the device query path -----------------------
+    nd = 600 if full else 240
+    nqd = 4
+    ddata = data[:nd]
+    net = ReferenceNet("levenshtein", ddata, eps_prime=1.0,
+                       tight_bounds=True).build()
+    flat = flatten_net(net)
+    dqs = mutate_queries(ddata, nqd, seed=5)
+    t0 = time.perf_counter()
+    hits, stats = device_range_query(flat, dqs, eps)
+    dev_dt = (time.perf_counter() - t0) * 1e6 / nqd
+    assert (hits == host_reference_hits(flat, dqs, eps)).all(), \
+        "fused device query lost exactness"
+    unpruned = stats["member_evals"] - stats["fused_pruned"]
+    out.append(row(
+        "kernels_fused_eps_device", dev_dt,
+        evals_frac=round(unpruned / (nqd * nd), 4),
+        member_evals=stats["member_evals"],
+        fused_pruned=stats["fused_pruned"],
+        prune_rate=round(stats["fused_pruned"]
+                         / max(stats["member_evals"], 1), 3)))
+
+    # -- registry trace discipline: shape-stable sweeps compile nothing ----
+    sweep = [("dtw", (16, 12, 2)), ("erp", (16, 12, 2)),
+             ("lev", (16, 12, None))]
+
+    def run_sweep():
+        rs = np.random.default_rng(0)
+        for mode, (B, L, d) in sweep:
+            if d is None:
+                xs = rs.integers(0, 8, (B, L))
+                ys = rs.integers(0, 8, (B, L))
+            else:
+                xs = rs.normal(size=(B, L, d)).astype(np.float32)
+                ys = rs.normal(size=(B, L, d)).astype(np.float32)
+            ops.wavefront(xs, ys, mode, interpret=True)
+
+    run_sweep()                       # warm the cache
+    t0 = time.perf_counter()
+    before = registry.STATS["traces"]
+    run_sweep()
+    sweep_dt = (time.perf_counter() - t0) * 1e6 / len(sweep)
+    retraces = registry.STATS["traces"] - before
+    assert retraces == 0, f"shape-stable sweep retraced {retraces} kernels"
+    out.append(row("kernels_registry_warm_sweep", sweep_dt, traces=retraces))
+    return out

@@ -24,8 +24,11 @@ import pathlib
 import sys
 
 #: deterministic, seed-fixed metrics: any increase is a real regression
+#: (``traces`` = kernel recompiles on a warm sweep; ``fused_pruned`` is
+#: gated through ``evals_frac`` — the *unpruned* fraction — so that a
+#: weaker prune certificate reads as the increase it is)
 COUNT_KEYS = ("evals_frac", "dispatches", "build_evals", "build_dispatches",
-              "lb_evals", "rounds")
+              "lb_evals", "rounds", "traces")
 
 
 def _rows_by_name(rows):

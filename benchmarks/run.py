@@ -24,6 +24,7 @@ MODULES = [
     ("matching", "benchmarks.bench_matching"),     # fig 12 + types II/III
     ("device", "benchmarks.bench_device"),         # TPU-adapted mode
     ("elastic", "benchmarks.bench_elastic"),       # fleet serving + resize
+    ("kernels", "benchmarks.bench_kernels"),       # kernel registry + packing
 ]
 
 

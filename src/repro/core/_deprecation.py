@@ -37,3 +37,15 @@ def warn_legacy(entry_point: str) -> None:
         "through the facade instead: "
         "repro.retrieval.Retriever.build(RetrievalConfig(...), data)",
         DeprecationWarning, stacklevel=3)
+
+
+def warn_moved(old: str, new: str) -> None:
+    """Deprecation for relocated internals (e.g. ``_batch_dist`` -> the
+    kernel registry).  Same suppression rule as the constructor shims, so
+    facade-internal delegation stays silent while external callers get one
+    release of warning."""
+    if getattr(_state, "internal", False):
+        return
+    warnings.warn(
+        f"{old} has moved to {new}; this delegation shim will be removed "
+        "in the next release", DeprecationWarning, stacklevel=3)

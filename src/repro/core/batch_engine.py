@@ -18,12 +18,14 @@ Two drivers consume plans:
 * :func:`drive` — sequential host mode, one dispatch per frontier.  Used by
   every index's classic ``range_query``; evaluation order and counts are
   bit-identical to the historical pair/level-at-a-time path.
-* :class:`BatchEngine` — runs *many* concurrent plans (all query segments
-  of one length bucket, §5: there are only ``2*lambda0 + 1`` buckets) in
-  lockstep rounds, folding every plan's current frontier into **one**
-  ``Distance.batch`` dispatch per round.  Because a bucket shares one
-  (Lx, Ly) shape, the fixed-shape Pallas wavefront kernel applies directly
-  (``CountedDistance(backend="pallas")``).
+* :class:`BatchEngine` — runs *many* concurrent plans (ALL query segments
+  across every length bucket, §5: there are only ``2*lambda0 + 1`` of
+  them) in lockstep rounds, folding every plan's current frontier into
+  **one** ``Distance.batch`` dispatch per round.  Rows carry their own
+  lengths, so the packed ragged-bucket kernel dispatcher
+  (``kernels/dispatch.py``) serves a whole round in one device call —
+  ``CountedDistance(backend="pallas")`` included, with fused ε-pruning for
+  verdict-only rows.
 
 Frontiers carry a ``kind``:
 
@@ -119,10 +121,12 @@ def _cascade(counter: CountedDistance, qs: np.ndarray, idxs: np.ndarray,
 class BatchEngine:
     """Run many concurrent range-query plans, one dispatch per round.
 
-    All plans in a call share one query length (the matching layer invokes
-    the engine once per segment-length bucket), so every merged round is a
-    single fixed-shape ``Distance.batch`` dispatch regardless of how many
-    segments, levels, or candidate lists contributed to it.
+    Plans of EVERY length bucket run together (pass a list of ragged query
+    rows): each merged round is a single packed ``Distance.batch`` dispatch
+    regardless of how many segments, buckets, levels, or candidate lists
+    contributed to it — per-row lengths ride through the counter into the
+    packed kernel dispatcher.  Uniform-length calls behave exactly as the
+    historical per-bucket engine (same counts, same dispatch sequence).
     """
 
     def __init__(self, counter: CountedDistance, *, lb_cascade: bool = False):
@@ -130,8 +134,8 @@ class BatchEngine:
         self.lb_cascade = lb_cascade
         self.rounds = 0  # merged frontier rounds (diagnostics / benchmarks)
 
-    def run(self, plans: Sequence[Plan], queries: np.ndarray,
-            eps: float, q_len: Optional[int] = None) -> List[List[int]]:
+    def run(self, plans: Sequence[Plan], queries, eps: float,
+            q_len: Optional[int] = None) -> List[List[int]]:
         """Drive ``plans[i]`` with query row ``queries[i]``; returns each
         plan's result.  Hit sets and exact-eval counts match sequential host
         mode.
@@ -140,11 +144,28 @@ class BatchEngine:
         ``counter.data`` — the pairwise (node-vs-node) mode: plan ``i``'s
         left-hand rows are gathered from the indexed database itself, which
         is how bulk construction drives cohorts of concurrent insert plans.
+
+        ``queries`` may also be a *list* of rows with differing lengths —
+        the packed ragged-bucket mode: plans from every length bucket run
+        in lockstep, and each merged round is still ONE backend dispatch
+        (rows carry their own lengths through the packed dispatcher), so
+        dispatches scale with rounds, not rounds x buckets.
         """
+        qlens: Optional[np.ndarray] = None  # per-plan lengths (packed mode)
+        if not isinstance(queries, np.ndarray) and q_len is None:
+            from repro.kernels.dispatch import pad_ragged_rows
+            rows = [np.asarray(q) for q in queries]
+            if len({len(r) for r in rows}) > 1:
+                queries, qlens = pad_ragged_rows(rows)
+            else:
+                queries = np.stack(rows) if rows \
+                    else np.zeros((0, 0), np.float32)
         queries = np.asarray(queries)
         pair_mode = queries.ndim == 1 and queries.dtype.kind in "iu"
         assert len(plans) == len(queries), "one query row per plan"
-        if q_len is not None:
+        if qlens is not None:
+            qlen = None
+        elif q_len is not None:
             qlen = int(q_len)
         elif pair_mode:
             qlen = self.counter.data.shape[1]
@@ -154,7 +175,10 @@ class BatchEngine:
         def qrows(row_ids: np.ndarray) -> np.ndarray:
             rows = self.counter.data[queries[row_ids]] if pair_mode \
                 else queries[row_ids]
-            return rows[:, :qlen]
+            return rows if qlen is None else rows[:, :qlen]
+
+        def row_lens(row_ids: np.ndarray):
+            return qlen if qlens is None else qlens[row_ids]
 
         results: List[Optional[List[int]]] = [None] * len(plans)
 
@@ -186,15 +210,24 @@ class BatchEngine:
             exact = np.ones(cand.size, bool)
             if self.lb_cascade and verdict.any():
                 lbs = self.counter.lower_bounds(
-                    qrows(rows[verdict]), cand[verdict], qlen)
+                    qrows(rows[verdict]), cand[verdict],
+                    row_lens(rows[verdict]))
                 if lbs is not None:
                     pruned = lbs > eps
                     ds[np.flatnonzero(verdict)[pruned]] = lbs[pruned]
                     exact[np.flatnonzero(verdict)[pruned]] = False
             if exact.any():
-                # the ONE exact dispatch of this round, whole bucket at once
+                # the ONE exact dispatch of this round — every plan, every
+                # length bucket.  On a fused backend, verdict-only rows
+                # carry the query ε (their values come back verdict-masked),
+                # value-consuming EXACT rows opt out via +inf.
+                feps = None
+                if self.counter.fused:
+                    feps = np.where(verdict[exact], np.float32(eps),
+                                    np.float32(np.inf))
                 ds[exact] = self.counter.eval_stacked(
-                    qrows(rows[exact]), cand[exact], qlen, bucket=bucket)
+                    qrows(rows[exact]), cand[exact], row_lens(rows[exact]),
+                    bucket=bucket, eps=feps)
             self.rounds += 1
 
             new_state = {}

@@ -20,14 +20,15 @@ exact and comparable.  Batch-aware accounting separates three quantities:
   cost is measured in the same currency as queries
   (``benchmarks/bench_build.py``).
 
-Backends (per-round batches are shape-bucketed, so all three see static
-shapes):
+Backends:
 
 * ``numpy``  — the anti-diagonal wavefront in numpy; best for the small
   sequential batches of host-mode traversal (no device dispatch overhead);
 * ``jax``    — the registry's jitted ``Distance.batch`` wavefront engine;
-* ``pallas`` — the fixed-shape Pallas wavefront kernel
-  (``kernels/ops.wavefront``), interpret-mode off-TPU.
+* ``pallas`` — the kernel registry's Pallas wavefront through the packed
+  ragged-bucket dispatcher (``kernels/dispatch.py``): rows of one dispatch
+  may mix length buckets freely, and an optional fused ε threshold returns
+  verdict-preserving masked distances.  Interpret-mode off-TPU.
 """
 
 from __future__ import annotations
@@ -45,17 +46,7 @@ BACKENDS = ("numpy", "jax", "pallas")
 QUERY = "query"
 BUILD = "build"
 
-#: registry name -> Pallas wavefront mode (kernels/ops.py)
-_PALLAS_MODE = {"dtw": "dtw", "erp": "erp", "frechet": "dfd",
-                "levenshtein": "lev"}
-
-
-def _pad_pow2(n: int) -> int:
-    """Next power of two >= n — caps jit recompilations across round sizes."""
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+from repro.kernels.registry import _pad_pow2  # one pow2 padding discipline
 
 
 def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
@@ -70,39 +61,24 @@ def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
     if backend == "jax":
         return _registry_batch(dist)
     if backend == "pallas":
-        mode = _PALLAS_MODE.get(dist.name)
-        if mode is None:  # euclidean / hamming / third-party: no wavefront
+        from repro.kernels import dispatch as kernel_dispatch
+        from repro.kernels import registry as kernel_registry
+        if not kernel_registry.has(dist.name):  # third-party: no kernel
             try:
                 return np_backend.batch_for(dist.name)
             except KeyError:
                 return _registry_batch(dist)
-        from repro.kernels import ops
 
-        def pallas_batch(xs, ys, lx=None, ly=None):
-            xs, ys = np.asarray(xs), np.asarray(ys)
-            if len(xs) == 0:
-                return np.zeros((0,), np.float32)
-            # fixed-shape kernel: the engine buckets by length, so every row
-            # of a dispatch shares one (Lx, Ly)
-            if lx is not None:
-                lx = np.asarray(lx)
-                assert lx.size == 0 or (lx == lx[0]).all(), \
-                    "pallas backend requires a single length bucket per dispatch"
-                if lx.size:
-                    xs = xs[:, : int(lx[0])]
-            if ly is not None:
-                ly = np.asarray(ly)
-                assert ly.size == 0 or (ly == ly[0]).all(), \
-                    "pallas backend requires a single length bucket per dispatch"
-                if ly.size:
-                    ys = ys[:, : int(ly[0])]
-            B = len(xs)
-            P = _pad_pow2(max(B, 8))
-            if P != B:
-                xs = np.concatenate([xs, xs[:1].repeat(P - B, 0)])
-                ys = np.concatenate([ys, ys[:1].repeat(P - B, 0)])
-            return np.asarray(ops.wavefront(xs, ys, mode))[:B]
+        def pallas_batch(xs, ys, lx=None, ly=None, eps=None):
+            # packed ragged-bucket dispatch: rows may mix length buckets
+            # freely (bucket-sorted, padded, ONE kernel call); ``eps``
+            # engages the fused ε path — non-hit rows come back as the BIG
+            # sentinel, which preserves every <= eps verdict.
+            out = kernel_dispatch.packed_batch(dist.name, xs, ys, lx, ly,
+                                               eps=eps)
+            return out.dist
 
+        pallas_batch.fused = True  # accepts the fused-ε keyword
         return pallas_batch
     raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
 
@@ -191,14 +167,26 @@ class CountedDistance:
         qs = np.repeat(q[None, :qlen], idxs.size, 0)
         return self.eval_stacked(qs, idxs, qlen, bucket=bucket)
 
+    @property
+    def fused(self) -> bool:
+        """Whether the backend supports fused ε-pruning (pallas kernels)."""
+        return getattr(self._batch, "fused", False)
+
     def eval_stacked(self, qs: np.ndarray, idxs: Sequence[int],
-                     q_len: Optional[int] = None, *,
-                     bucket: str = QUERY) -> np.ndarray:
+                     q_len=None, *, bucket: str = QUERY,
+                     eps=None) -> np.ndarray:
         """delta(qs[i], data[idxs[i]]) row-wise in ONE backend dispatch.
 
         ``qs`` holds one (possibly repeated) query row per candidate — the
         frontier engine concatenates every concurrent query's round into a
         single call here, so dispatches scale with rounds, not candidates.
+        ``q_len`` may be a scalar or a per-row vector: the packed engine
+        mixes every length bucket of a round into one dispatch.  ``eps``
+        (scalar or per-row; +inf rows opt out) engages the backend's fused
+        ε path when it has one — returned values keep every ``<= eps``
+        verdict (non-hits come back as a quasi-infinity), and accounting is
+        unchanged: each requested row is one exact evaluation, padding rows
+        are never counted.
         """
         idxs = np.asarray(idxs, np.int64)
         if idxs.size == 0:
@@ -206,26 +194,36 @@ class CountedDistance:
         qs = np.asarray(qs)
         ys = self.data[idxs]
         L = ys.shape[1]
-        qlen = qs.shape[1] if q_len is None else int(q_len)
-        if not self.dist.variable_length and qlen != L:
+        if q_len is None:
+            lx = np.full(len(ys), qs.shape[1], np.int64)
+        elif np.ndim(q_len) == 0:
+            lx = np.full(len(ys), int(q_len), np.int64)
+        else:
+            lx = np.asarray(q_len, np.int64)
+        if not self.dist.variable_length and (lx != L).any():
+            bad = int(lx[(lx != L).argmax()])
             raise ValueError(
-                f"{self.dist.name} requires equal lengths ({qlen} != {L})")
+                f"{self.dist.name} requires equal lengths ({bad} != {L})")
         if bucket == BUILD:
             self.build_count += int(idxs.size)
             self.build_dispatches += 1
         else:
             self.count += int(idxs.size)
             self.dispatches += 1
-        # Rectangular (Lx != Ly) tiles are supported by all backends.
-        xs = qs[:, :qlen]
-        lx = np.full(len(ys), qlen)
+        # Rectangular (Lx != Ly) and ragged tiles: all backends take
+        # per-row length vectors.
+        xs = qs[:, :int(lx.max())]
         ly = np.full(len(ys), L)
+        if eps is not None and self.fused:
+            return np.asarray(self._batch(xs, ys, lx, ly, eps=eps),
+                              np.float32)
         return np.asarray(self._batch(xs, ys, lx, ly), np.float32)
 
     def lower_bounds(self, qs: np.ndarray, idxs: Sequence[int],
-                     q_len: Optional[int] = None) -> Optional[np.ndarray]:
+                     q_len=None) -> Optional[np.ndarray]:
         """Cheap row-wise lower bounds, or None when the distance has none.
 
+        ``q_len`` scalar or per-row (packed rounds mix length buckets).
         Counted in ``lb_count`` only — never in ``count``."""
         lb = self.dist.lower_bound
         if lb is None:
@@ -235,11 +233,15 @@ class CountedDistance:
             return np.zeros((0,), np.float32)
         qs = np.asarray(qs)
         ys = self.data[idxs]
-        qlen = qs.shape[1] if q_len is None else int(q_len)
+        if q_len is None:
+            lx = np.full(len(ys), qs.shape[1], np.int64)
+        elif np.ndim(q_len) == 0:
+            lx = np.full(len(ys), int(q_len), np.int64)
+        else:
+            lx = np.asarray(q_len, np.int64)
         self.lb_count += int(idxs.size)
-        lx = np.full(len(ys), qlen)
         ly = np.full(len(ys), ys.shape[1])
-        return np.asarray(lb(qs[:, :qlen], ys, lx, ly), np.float32)
+        return np.asarray(lb(qs[:, :int(lx.max())], ys, lx, ly), np.float32)
 
     def pairwise(self, i: int, idxs: Sequence[int], *,
                  bucket: str = BUILD) -> np.ndarray:

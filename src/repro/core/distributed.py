@@ -34,11 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import _deprecation
 from repro.core.refnet import ReferenceNet
 from repro.distances import np_backend
-
-_MODE_OF = {"levenshtein": "lev", "erp": "erp", "frechet": "dfd",
-            "dtw": "dtw", "euclidean": None, "hamming": None}
+from repro.kernels import registry as kernel_registry
 
 
 @dataclasses.dataclass
@@ -195,37 +194,43 @@ def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
 
 
 def _batch_dist(dist_name: str, qs, xs, interpret=True):
-    """Batched distance via the Pallas kernels (or plain L2)."""
-    mode = _MODE_OF[dist_name]
-    if mode is None:
-        diff = qs.astype(jnp.float32) - xs.astype(jnp.float32)
-        # one squared-difference sum over every non-batch axis (repeated
-        # sum-of-squares passes would re-square multi-dim windows)
-        d2 = jnp.sum(diff * diff, axis=tuple(range(1, diff.ndim)))
-        return jnp.sqrt(jnp.maximum(d2, 0.0))
-    from repro.kernels import ops
-    return ops.wavefront(qs, xs, mode, interpret=interpret)
+    """Deprecated shim: batched distance now lives in the kernel registry.
+
+    The device query path composes :meth:`KernelSpec.device_call` directly;
+    this wrapper keeps external callers working for one release (the
+    warning is suppressed inside facade-internal construction, mirroring
+    the legacy-constructor shims)."""
+    _deprecation.warn_moved("core.distributed._batch_dist",
+                            "repro.kernels.registry.get(name).device_call")
+    return kernel_registry.get(dist_name).device_call(
+        qs, xs, interpret=interpret).dist
 
 
 def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
-                       capacity: Optional[int] = None, interpret: bool = True
+                       capacity: Optional[int] = None, interpret: bool = True,
+                       q_lens: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, dict]:
     """Batched exact range query on one shard.
 
     Returns (hits (Q, N) bool, stats).  ``capacity`` is the static budget of
     survivor evaluations; on overflow the query is retried with 2x budget
     (each retry is one recompile — production sets it from telemetry).
+    ``q_lens`` gives per-query actual lengths (ragged batches padded to a
+    common width — the fleet layer packs every length bucket into one call).
     """
     Q = qs.shape[0]
     N = len(flat.data)
     if capacity is None:
         capacity = max(64, N // 4) * Q
+    if q_lens is None:
+        q_lens = np.full(Q, qs.shape[1], np.int32)
     mem_valid = flat.members >= 0                     # (P, M)
     mem_safe = np.maximum(flat.members, 0)
 
     def run(cap: int):
         return _device_query_jit(
-            jnp.asarray(qs), jnp.asarray(flat.pivots),
+            jnp.asarray(qs), jnp.asarray(q_lens, jnp.int32),
+            jnp.asarray(flat.pivots),
             jnp.asarray(flat.pivot_radius), jnp.asarray(mem_safe),
             jnp.asarray(mem_valid), jnp.asarray(flat.member_dist),
             jnp.asarray(flat.data), float(eps), cap, flat.dist_name,
@@ -233,12 +238,13 @@ def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
 
     cap = int(capacity)
     while True:
-        hits, n_need, n_evals = run(cap)
+        hits, n_need, n_evals, n_pruned = run(cap)
         if int(n_need) <= cap:
             break
         cap *= 2
     stats = {"pivot_evals": Q * flat.n_pivots,
              "member_evals": int(n_evals),
+             "fused_pruned": int(n_pruned),
              "capacity": cap,
              "total_evals": Q * flat.n_pivots + int(n_evals)}
     return np.asarray(hits), stats
@@ -247,16 +253,18 @@ def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
 from functools import partial
 
 
-@partial(jax.jit, static_argnums=(7, 8, 9, 10))
-def _device_query_jit(qs, pivots, pradius, members, mem_valid, mem_dist,
-                      data, eps, capacity, dist_name, interpret):
+@partial(jax.jit, static_argnums=(8, 9, 10, 11))
+def _device_query_jit(qs, q_lens, pivots, pradius, members, mem_valid,
+                      mem_dist, data, eps, capacity, dist_name, interpret):
     Q = qs.shape[0]
     P, M = members.shape
     N = data.shape[0]
-    # 1. queries x pivots
+    spec = kernel_registry.get(dist_name)
+    # 1. queries x pivots — value-consuming (feeds the ring bounds)
     qs_rep = jnp.repeat(qs, P, axis=0)
     pv_rep = jnp.tile(pivots, (Q,) + (1,) * (pivots.ndim - 1))
-    dp = _batch_dist(dist_name, qs_rep, pv_rep, interpret).reshape(Q, P)
+    dp = spec.device_call(qs_rep, pv_rep, lx=jnp.repeat(q_lens, P),
+                          interpret=interpret).dist.reshape(Q, P)
     # 2. pivot verdicts
     acc_all = dp + pradius[None, :] <= eps            # accept whole list
     prune_all = dp - pradius[None, :] > eps
@@ -273,7 +281,8 @@ def _device_query_jit(qs, pivots, pradius, members, mem_valid, mem_dist,
     ww = jnp.broadcast_to(members[None], (Q, P, M)).reshape(-1)
     free_in = ((acc_all[:, :, None] & mem_valid[None]) | accept_m).reshape(-1)
     hits = hits.at[qq, ww].max(free_in)
-    # 4. compact survivors and evaluate
+    # 4. compact survivors and evaluate — fused ε: the kernel returns the
+    # hit mask directly and never materializes distances of pruned rows
     flat_need = need_eval.reshape(-1)
     n_need = jnp.sum(flat_need)
     sel = jnp.nonzero(flat_need, size=capacity, fill_value=0)[0]
@@ -284,10 +293,11 @@ def _device_query_jit(qs, pivots, pradius, members, mem_valid, mem_dist,
     q_of = sel // (P * M)
     pm = sel % (P * M)
     w_of = members.reshape(-1)[pm]
-    d = _batch_dist(dist_name, qs[q_of], data[w_of], interpret)
-    good = valid_sel & (d <= eps)
+    out = spec.device_call(qs[q_of], data[w_of], lx=q_lens[q_of], eps=eps,
+                           interpret=interpret)
+    good = valid_sel & out.hit
     hits = hits.at[q_of, w_of].max(good)
-    return hits, n_need, jnp.sum(valid_sel)
+    return hits, n_need, jnp.sum(valid_sel), jnp.sum(valid_sel & out.pruned)
 
 
 def host_reference_hits(flat: FlatNet, qs: np.ndarray, eps: float
@@ -383,6 +393,7 @@ def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
                  "capacity": s["capacity"],
                  "fleet_pivot_evals": s["pivot_evals"],
                  "fleet_member_evals": s["member_evals"],
+                 "fleet_fused_pruned": s.get("fused_pruned", 0),
                  "fleet_total_evals": s["total_evals"]}
         for (i, f), off in zip(alive, offsets):
             results[i] = hits[:, off:off + len(f.data)]

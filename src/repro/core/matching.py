@@ -192,23 +192,34 @@ class SubsequenceMatcher:
     def segment_hits(self, Q: np.ndarray, eps: float) -> List[SegmentHit]:
         """Step 4: range-query every segment against the window index.
 
-        Batched mode drives all segments of one length bucket through the
-        frontier engine together — one ``Distance.batch`` dispatch per
-        frontier round per bucket instead of one per (segment, candidate
-        list).  Hit sets and exact-eval counts are identical to the legacy
-        per-segment loop (property-tested in tests/test_batch_engine.py).
+        Batched mode drives ALL segments — every length bucket at once —
+        through one frontier-engine run: each merged round is one packed
+        ``Distance.batch`` dispatch (``kernels/dispatch.py`` bucket-sorts
+        the rows device-side) instead of one per round per bucket.  Hit
+        sets and exact-eval counts are identical to the legacy per-segment
+        loop (property-tested in tests/test_batch_engine.py).
         """
         Q = np.asarray(Q)
         hits: List[SegmentHit] = []
-        for ln, (arr, segs) in seg.query_segments(
-                Q, self.lam, self.lambda0).items():
-            if self.batched:
-                plans = [self.index.range_query_plan(eps) for _ in segs]
-                per_seg = self.engine.run(plans, arr, eps, q_len=ln)
-            else:
-                per_seg = [self.index.range_query(
-                    a, eps, q_len=ln, lb_cascade=self.lb_cascade)
-                    for a in arr]
+        buckets = seg.query_segments(Q, self.lam, self.lambda0)
+        if self.batched:
+            rows: List[np.ndarray] = []
+            segs_all: List[seg.Segment] = []
+            for ln, (arr, segs) in buckets.items():
+                rows.extend(np.asarray(a) for a in arr)
+                segs_all.extend(segs)
+            plans = [self.index.range_query_plan(eps) for _ in rows]
+            per_seg = self.engine.run(plans, rows, eps) if plans else []
+            for s, wins in zip(segs_all, per_seg):
+                for w in wins:
+                    hits.append(SegmentHit(
+                        segment=s, window_idx=int(w), window=self.meta[w],
+                        distance=math.nan))
+            return hits
+        for ln, (arr, segs) in buckets.items():
+            per_seg = [self.index.range_query(
+                a, eps, q_len=ln, lb_cascade=self.lb_cascade)
+                for a in arr]
             for s, wins in zip(segs, per_seg):
                 for w in wins:
                     hits.append(SegmentHit(

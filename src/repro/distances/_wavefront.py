@@ -104,6 +104,10 @@ def wavefront_dp(
             c_dl = jnp.take(gap_y, jnp.clip(cj, 0, Ly - 1), axis=1)
             c_dl = jnp.where(validj[None, :], c_dl, 0.0)
         new = combine(c, c_du, c_dl, dd, du, dl)
+        # Clamp: sums involving the BIG quasi-infinity sentinel (or extreme
+        # gap-mass borders) must stay at BIG, not overflow to float32
+        # inf/NaN — BIG's ordering against real values is what masks cells.
+        new = jnp.minimum(new, BIG)
         # Borders: i = k is column j = 0; i = 0 is row j = k.
         new = jnp.where((ii == k)[None, :] & (k <= Lx),
                         border_col[:, jnp.minimum(k, Lx)][:, None], new)

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The unified device-kernel substrate: one KernelSpec per distance
+# (registry.py: wavefront dtw/erp/dfd/lev + elementwise euclidean/hamming,
+# one interpret policy, one per-shape jit cache), packed ragged-bucket
+# dispatch (dispatch.py), the Pallas kernel bodies (wavefront.py,
+# pairwise_l2.py), jnp oracles (ref.py), and thin compat wrappers (ops.py).

@@ -1,9 +1,12 @@
 """Jitted public wrappers around the Pallas kernels.
 
-Layout preparation (reversal, padding, border construction) happens here in
-cheap O(L) jnp ops; the kernels consume pre-laid-out tiles.  On non-TPU
-backends the kernels run in ``interpret=True`` mode (Python semantics of the
-same kernel body), which is how this container validates them.
+Since the kernel-registry refactor this module is a thin compatibility
+shim: layout preparation, the interpret policy, and per-shape jit caching
+all live in ``repro.kernels.registry`` (one cache for every caller — the
+counter backend, the device query path, and these wrappers), and ragged /
+fused-ε dispatch lives in ``repro.kernels.dispatch``.  On non-TPU backends
+the kernels run in ``interpret=True`` mode (Python semantics of the same
+kernel body), which is how this container validates them.
 """
 
 from __future__ import annotations
@@ -15,14 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as _ref
+from repro.kernels import registry
 from repro.kernels.pairwise_l2 import pairwise_l2_pallas
-from repro.kernels.wavefront import wavefront_pallas
 
 MODES = _ref.MODES
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _pad_batch(a, mult):
@@ -34,66 +33,25 @@ def _pad_batch(a, mult):
     return jnp.pad(a, pad)
 
 
-def wavefront(xs, ys, mode: str, *, block_b: int = 8, interpret=None):
-    """Batched fixed-length alignment distance.
+def wavefront(xs, ys, mode: str, *, block_b: int = 8, interpret=None,
+              lens_x=None, lens_y=None, eps=None):
+    """Batched alignment distance through the kernel registry.
 
     Args:
       xs: (B, Lx) int tokens for mode='lev', else (B, Lx[, d]) float series.
       ys: (B, Ly) / (B, Ly[, d]) likewise.
       mode: one of dtw | erp | dfd | lev.
+      lens_x, lens_y: optional per-row actual lengths (ragged batches).
+      eps: optional fused-ε threshold (scalar or per-row).
 
-    Returns: (B,) float32 distances.
+    Returns: (B,) float32 distances, or the full
+    :class:`~repro.kernels.registry.KernelOut` when ``eps`` is given.
     """
     assert mode in MODES, mode
-    if interpret is None:
-        interpret = not _on_tpu()
-    xs = jnp.asarray(xs)
-    ys = jnp.asarray(ys)
-    if mode == "lev":
-        xs = xs.astype(jnp.float32)[..., None]
-        ys = ys.astype(jnp.float32)[..., None]
-    else:
-        xs = xs.astype(jnp.float32)
-        ys = ys.astype(jnp.float32)
-        if xs.ndim == 2:
-            xs, ys = xs[..., None], ys[..., None]
-    B, Lx, d = xs.shape
-    Ly = ys.shape[1]
-
-    # x laid out so position i holds x[i-1]
-    x_pad = jnp.pad(xs, ((0, 0), (1, 0), (0, 0)))
-    # reversed y padded so that diagonal k reads window start Lx+1+Ly-k
-    Ypad = 2 * Lx + Ly + 1
-    y_rev = jnp.flip(ys, axis=1)
-    y_rev_pad = jnp.pad(y_rev, ((0, 0), (Lx + 1, Ypad - (Lx + 1) - Ly), (0, 0)))
-
-    if mode == "erp":
-        gx = jnp.sqrt(jnp.maximum(jnp.sum(xs * xs, -1), 0.0))   # (B, Lx)
-        gy = jnp.sqrt(jnp.maximum(jnp.sum(ys * ys, -1), 0.0))   # (B, Ly)
-        gap_x = jnp.pad(gx, ((0, 0), (1, 0)))
-        gy_rev = jnp.flip(gy, axis=1)
-        gap_y_rev = jnp.pad(gy_rev, ((0, 0), (Lx + 1, Ypad - (Lx + 1) - Ly)))
-        zero = jnp.zeros((B, 1), jnp.float32)
-        border_col = jnp.concatenate([zero, jnp.cumsum(gx, 1)], axis=1)
-        border_row = jnp.concatenate([zero, jnp.cumsum(gy, 1)], axis=1)
-    else:
-        gap_x = jnp.zeros((B, Lx + 1), jnp.float32)
-        gap_y_rev = jnp.zeros((B, Ypad), jnp.float32)
-        if mode == "lev":
-            border_col = jnp.broadcast_to(
-                jnp.arange(Lx + 1, dtype=jnp.float32)[None], (B, Lx + 1))
-            border_row = jnp.broadcast_to(
-                jnp.arange(Ly + 1, dtype=jnp.float32)[None], (B, Ly + 1))
-        else:
-            big = jnp.float32(3.4e37)
-            border_col = jnp.full((B, Lx + 1), big).at[:, 0].set(0.0)
-            border_row = jnp.full((B, Ly + 1), big).at[:, 0].set(0.0)
-
-    args = [x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row]
-    args = [_pad_batch(a, block_b) for a in args]
-    out = wavefront_pallas(*args, mode=mode, Lx=Lx, Ly=Ly, d=d,
-                           block_b=block_b, interpret=bool(interpret))
-    return out[:B]
+    spec = registry.spec_for_mode(mode)
+    out = spec.batch(xs, ys, lens_x, lens_y, eps=eps, block_b=block_b,
+                     interpret=interpret)
+    return out if eps is not None else out.dist
 
 
 def wavefront_ref(xs, ys, mode: str):
@@ -103,8 +61,7 @@ def wavefront_ref(xs, ys, mode: str):
 
 def pairwise_l2(x, y, *, bm: int = 128, bn: int = 128, interpret=None):
     """(M, d) x (N, d) -> (M, N) Euclidean distances via the tiled kernel."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = registry.resolve_interpret(interpret)
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     M, N = x.shape[0], y.shape[0]

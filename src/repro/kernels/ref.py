@@ -52,13 +52,19 @@ def prepare(xs, ys, mode):
         xs, ys = xs[..., None], ys[..., None]
     B, Lx = xs.shape[0], xs.shape[1]
     Ly = ys.shape[1]
-    cost = l2_cost(xs, ys)
+    cost = jnp.minimum(l2_cost(xs, ys), BIG)
     if mode == "erp":
-        gap_x = jnp.sqrt(jnp.maximum(jnp.sum(xs * xs, -1), 0.0))
-        gap_y = jnp.sqrt(jnp.maximum(jnp.sum(ys * ys, -1), 0.0))
+        # clamp gaps and border cumsums at BIG so long high-gap-mass series
+        # cannot push the borders past the quasi-infinity sentinel (inf/NaN)
+        gap_x = jnp.minimum(
+            jnp.sqrt(jnp.maximum(jnp.sum(xs * xs, -1), 0.0)), BIG)
+        gap_y = jnp.minimum(
+            jnp.sqrt(jnp.maximum(jnp.sum(ys * ys, -1), 0.0)), BIG)
         zero = jnp.zeros((B, 1), jnp.float32)
-        border_col = jnp.concatenate([zero, jnp.cumsum(gap_x, 1)], axis=1)
-        border_row = jnp.concatenate([zero, jnp.cumsum(gap_y, 1)], axis=1)
+        border_col = jnp.minimum(
+            jnp.concatenate([zero, jnp.cumsum(gap_x, 1)], axis=1), BIG)
+        border_row = jnp.minimum(
+            jnp.concatenate([zero, jnp.cumsum(gap_y, 1)], axis=1), BIG)
     else:
         gap_x = gap_y = None
         border_col = jnp.full((B, Lx + 1), BIG, jnp.float32).at[:, 0].set(0.0)

@@ -1,0 +1,298 @@
+"""One kernel registry for every device evaluation path.
+
+Before this module existed the repo had four parallel device paths that had
+drifted apart (``kernels/ops.py`` re-resolving the backend and re-laying-out
+operands per call, ``core/counter.py``'s pallas branch restricted to a
+single length bucket, ``core/distributed.py``'s private ``_batch_dist``,
+and the jnp oracle).  Novak et al. (arXiv:1206.2510) argue for exactly one
+pluggable evaluation substrate under many matching strategies; this
+registry is that substrate's single entry point:
+
+* one :class:`KernelSpec` per distance, keyed exactly like the PR-4
+  distance registry (``dtw`` / ``erp`` / ``frechet`` / ``levenshtein`` —
+  the wavefront modes — plus elementwise ``euclidean`` / ``hamming``);
+* one ``interpret`` policy: resolved against the default JAX backend once
+  per process (:func:`default_interpret`), not per call;
+* one jit cache: every ``(kernel, Lx, Ly, d, batch, block, interpret)``
+  shape class compiles exactly once (:data:`STATS` counts traces — the
+  retrace regression tests gate this);
+* fused ε-pruning (Twin Subsequence Search, arXiv:2104.06874): pass
+  ``eps`` and the kernel returns the hit mask and early-prune certificate
+  alongside ``BIG``-masked distances, so range queries never materialize
+  distances for pruned candidates.
+
+Two calling conventions per spec:
+
+* :meth:`KernelSpec.device_call` — *traceable*: safe inside an enclosing
+  ``jax.jit`` (``core/distributed._device_query_jit`` composes it);
+* :meth:`KernelSpec.batch` — host entry: numpy in/out, batch padded to a
+  power of two, routed through the shared jit cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.wavefront import BIG, wavefront_pallas
+
+#: wavefront mode <-> distance-registry name
+MODE_OF_NAME = {"dtw": "dtw", "erp": "erp", "frechet": "dfd",
+                "levenshtein": "lev"}
+NAME_OF_MODE = {v: k for k, v in MODE_OF_NAME.items()}
+
+#: trace/call accounting — ``traces`` increments once per kernel compile
+#: (the retrace regression tests pin it), ``calls`` once per host dispatch.
+STATS = {"traces": 0, "calls": 0}
+
+_JIT_CACHE: Dict[tuple, object] = {}
+_DEFAULT_INTERPRET: Optional[bool] = None
+
+
+class KernelOut(NamedTuple):
+    """One device evaluation: masked distances + fused-ε masks.
+
+    ``dist`` holds the exact distance for rows whose verdict is a hit (or
+    every row when ``eps`` was +inf/None), ``BIG`` otherwise.  ``pruned``
+    marks rows certified ``> eps`` before their final diagonal (a subset
+    of ``~hit``)."""
+    dist: object
+    hit: object
+    pruned: object
+
+
+def default_interpret() -> bool:
+    """Interpret-mode policy, resolved against the JAX backend ONCE."""
+    global _DEFAULT_INTERPRET
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+    return _DEFAULT_INTERPRET
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def clear_cache() -> None:
+    """Drop compiled kernels + stats (test hygiene)."""
+    _JIT_CACHE.clear()
+    STATS["traces"] = 0
+    STATS["calls"] = 0
+
+
+def _pad_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_rows(a: np.ndarray, P: int) -> np.ndarray:
+    if len(a) == P:
+        return a
+    pad = [(0, P - len(a))] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Device evaluation of one registered distance."""
+
+    name: str                 # distance-registry key
+    kind: str                 # "wavefront" | "elementwise"
+    mode: Optional[str] = None  # wavefront DP mode (dtw/erp/dfd/lev)
+
+    # -- traceable path ------------------------------------------------------
+
+    def device_call(self, xs, ys, lx=None, ly=None, eps=None, *,
+                    block_b: int = 8, interpret: Optional[bool] = None
+                    ) -> KernelOut:
+        """Traceable batched evaluation -> :class:`KernelOut` of jnp arrays.
+
+        ``xs``/``ys`` are row-paired ``(B, Lx[, d])`` / ``(B, Ly[, d])``
+        batches (integer tokens for the string distances); ``lx``/``ly``
+        per-row actual lengths (default: the padded widths); ``eps`` a
+        scalar or per-row threshold enabling the fused ε outputs.
+        """
+        interpret = resolve_interpret(interpret)
+        xs = jnp.asarray(xs)
+        ys = jnp.asarray(ys)
+        B = xs.shape[0]
+        lx = jnp.full((B,), xs.shape[1], jnp.int32) if lx is None \
+            else jnp.asarray(lx, jnp.int32)
+        ly = jnp.full((B,), ys.shape[1], jnp.int32) if ly is None \
+            else jnp.asarray(ly, jnp.int32)
+        eps_v = jnp.full((B,), jnp.inf, jnp.float32) if eps is None \
+            else jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (B,))
+        if self.kind == "elementwise":
+            return self._elementwise(xs, ys, lx, eps_v)
+        return self._wavefront(xs, ys, lx, ly, eps_v, block_b=block_b,
+                               interpret=interpret)
+
+    def _elementwise(self, xs, ys, lx, eps_v) -> KernelOut:
+        L = xs.shape[1]
+        mask = jnp.arange(L)[None, :] < lx[:, None]
+        if self.name == "hamming":
+            d = jnp.sum((xs != ys) & mask, axis=1).astype(jnp.float32)
+        else:  # euclidean
+            diff = xs.astype(jnp.float32) - ys.astype(jnp.float32)
+            d2 = diff * diff
+            if d2.ndim == 3:
+                d2 = jnp.sum(d2, axis=-1)
+            d = jnp.sqrt(jnp.maximum(jnp.sum(d2 * mask, axis=1), 0.0))
+        hit = d <= eps_v
+        return KernelOut(jnp.where(hit, d, BIG), hit,
+                         jnp.zeros_like(hit))
+
+    def _wavefront(self, xs, ys, lx, ly, eps_v, *, block_b, interpret
+                   ) -> KernelOut:
+        mode = self.mode
+        xs = xs.astype(jnp.float32)  # lev tokens ride as exact small floats
+        ys = ys.astype(jnp.float32)
+        if xs.ndim == 2:
+            xs, ys = xs[..., None], ys[..., None]
+        B, Lx, d = xs.shape
+        Ly = ys.shape[1]
+
+        # layout: x laid out so position i holds x[i-1]; reversed y padded so
+        # diagonal k reads window start Lx+1+Ly-k (ragged rows keep their
+        # zero padding at the *front* after the flip — the DP cells that
+        # read it never feed the answer at (len_x, len_y))
+        x_pad = jnp.pad(xs, ((0, 0), (1, 0), (0, 0)))
+        Ypad = 2 * Lx + Ly + 1
+        y_rev = jnp.flip(ys, axis=1)
+        y_rev_pad = jnp.pad(y_rev, ((0, 0), (Lx + 1, Ypad - (Lx + 1) - Ly),
+                                    (0, 0)))
+
+        if mode == "erp":
+            gx = jnp.minimum(jnp.sqrt(jnp.maximum(
+                jnp.sum(xs * xs, -1), 0.0)), BIG)          # (B, Lx)
+            gy = jnp.minimum(jnp.sqrt(jnp.maximum(
+                jnp.sum(ys * ys, -1), 0.0)), BIG)          # (B, Ly)
+            # zero the padding tail so border cumsums end at (len_x, len_y)
+            gx = jnp.where(jnp.arange(Lx)[None, :] < lx[:, None], gx, 0.0)
+            gy = jnp.where(jnp.arange(Ly)[None, :] < ly[:, None], gy, 0.0)
+            gap_x = jnp.pad(gx, ((0, 0), (1, 0)))
+            gy_rev = jnp.flip(gy, axis=1)
+            gap_y_rev = jnp.pad(gy_rev,
+                                ((0, 0), (Lx + 1, Ypad - (Lx + 1) - Ly)))
+            zero = jnp.zeros((B, 1), jnp.float32)
+            # clamp: a cumsum above the BIG sentinel would corrupt the DP's
+            # quasi-infinity ordering (and overflow to inf three adds later)
+            border_col = jnp.minimum(
+                jnp.concatenate([zero, jnp.cumsum(gx, 1)], axis=1), BIG)
+            border_row = jnp.minimum(
+                jnp.concatenate([zero, jnp.cumsum(gy, 1)], axis=1), BIG)
+        else:
+            gap_x = jnp.zeros((B, Lx + 1), jnp.float32)
+            gap_y_rev = jnp.zeros((B, Ypad), jnp.float32)
+            if mode == "lev":
+                border_col = jnp.broadcast_to(
+                    jnp.arange(Lx + 1, dtype=jnp.float32)[None], (B, Lx + 1))
+                border_row = jnp.broadcast_to(
+                    jnp.arange(Ly + 1, dtype=jnp.float32)[None], (B, Ly + 1))
+            else:
+                big = jnp.float32(BIG)
+                border_col = jnp.full((B, Lx + 1), big).at[:, 0].set(0.0)
+                border_row = jnp.full((B, Ly + 1), big).at[:, 0].set(0.0)
+
+        lens = jnp.stack([lx, ly], axis=1).astype(jnp.int32)  # (B, 2)
+        eps_col = eps_v[:, None]
+        args = [x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row,
+                lens, eps_col]
+        P = B + ((-B) % block_b)
+        if P != B:
+            args = [jnp.pad(a, [(0, P - B)] + [(0, 0)] * (a.ndim - 1))
+                    for a in args]
+        dist, hit, pruned = wavefront_pallas(
+            *args, mode=mode, Lx=Lx, Ly=Ly, d=d, block_b=block_b,
+            interpret=interpret)
+        return KernelOut(dist[:B], hit[:B], pruned[:B])
+
+    # -- host path (cached jit) ----------------------------------------------
+
+    def batch(self, xs, ys, lx=None, ly=None, eps=None, *,
+              block_b: int = 8, interpret: Optional[bool] = None
+              ) -> KernelOut:
+        """Host entry: numpy in/out, shapes padded and jit-cached.
+
+        ``lx``/``ly`` may mix length buckets freely; operands are trimmed
+        to the max actual lengths and the batch padded to a power of two so
+        the number of distinct compiled shapes stays bounded.
+        """
+        xs = np.asarray(xs)
+        ys = np.asarray(ys)
+        B = len(xs)
+        if B == 0:
+            z = np.zeros((0,), np.float32)
+            return KernelOut(z, z.astype(bool), z.astype(bool))
+        if lx is None:
+            lx = np.full(B, xs.shape[1], np.int32)
+        else:
+            lx = np.asarray(lx, np.int32)
+            xs = xs[:, :max(int(lx.max()), 1)]
+        if ly is None:
+            ly = np.full(B, ys.shape[1], np.int32)
+        else:
+            ly = np.asarray(ly, np.int32)
+            ys = ys[:, :max(int(ly.max()), 1)]
+        eps_v = np.full(B, np.inf, np.float32) if eps is None else \
+            np.broadcast_to(np.asarray(eps, np.float32), (B,))
+        interpret = resolve_interpret(interpret)
+
+        P = _pad_pow2(max(B, block_b))
+        fn = self._cached(xs, ys, P, block_b, interpret)
+        d, h, p = fn(_pad_rows(xs, P), _pad_rows(ys, P), _pad_rows(lx, P),
+                     _pad_rows(ly, P), _pad_rows(eps_v, P))
+        STATS["calls"] += 1
+        return KernelOut(np.asarray(d)[:B], np.asarray(h)[:B],
+                         np.asarray(p)[:B])
+
+    def _cached(self, xs, ys, P, block_b, interpret):
+        key = (self.name, xs.shape[1:], str(xs.dtype), ys.shape[1:],
+               str(ys.dtype), P, block_b, interpret)
+        fn = _JIT_CACHE.get(key)
+        if fn is None:
+            spec = self
+
+            def traced(xs, ys, lx, ly, eps):
+                STATS["traces"] += 1  # python side effect: runs per (re)trace
+                return spec.device_call(xs, ys, lx, ly, eps,
+                                        block_b=block_b, interpret=interpret)
+
+            fn = jax.jit(traced)
+            _JIT_CACHE[key] = fn
+        return fn
+
+
+_KERNELS: Dict[str, KernelSpec] = {}
+for _name, _mode in MODE_OF_NAME.items():
+    _KERNELS[_name] = KernelSpec(name=_name, kind="wavefront", mode=_mode)
+for _name in ("euclidean", "hamming"):
+    _KERNELS[_name] = KernelSpec(name=_name, kind="elementwise")
+
+
+def has(name: str) -> bool:
+    return name in _KERNELS
+
+
+def get(name: str) -> KernelSpec:
+    if name not in _KERNELS:
+        raise KeyError(
+            f"no device kernel for distance {name!r}; have {sorted(_KERNELS)}")
+    return _KERNELS[name]
+
+
+def spec_for_mode(mode: str) -> KernelSpec:
+    """Look up a wavefront spec by DP mode (``dtw``/``erp``/``dfd``/``lev``)."""
+    if mode not in NAME_OF_MODE:
+        raise KeyError(f"unknown wavefront mode {mode!r}")
+    return get(NAME_OF_MODE[mode])
+
+
+def names():
+    return sorted(_KERNELS)

@@ -15,14 +15,30 @@ distance).  The TPU-native schedule:
 * borders (column j=0 / row i=0) are injected per step from precomputed
   border vectors (constant for DTW/DFD/Lev, gap cumsums for ERP).
 
+Ragged batches: every row carries its own ``(len_x, len_y)`` (the packed
+dispatcher concatenates all length buckets of a round into one call), and
+the answer ``D[len_x, len_y]`` is recorded on the fly when diagonal
+``len_x + len_y`` passes.  Cells outside a row's actual problem compute
+padding garbage that never feeds its answer cell (DP dependencies only
+point to smaller indices).
+
+Fused ε-pruning: each row also carries an ``eps`` threshold.  All four
+distances are monotone along alignment paths (every combine adds a
+nonnegative cost or takes a max), and any monotone path touches at least
+one cell of any two consecutive diagonals, so ``min`` over the two rolling
+diagonals exceeding ``eps`` is a certificate that the final distance does.
+The kernel tracks that certificate per row (the ``pruned`` output) and only
+materializes distances for rows whose verdict is a hit — pruned and missed
+rows ship the ``BIG`` sentinel plus a 0 in the ``hit`` mask.  Passing
+``eps = +inf`` (the default layout for value-consuming callers) disables
+both effects, so fused and plain evaluation share one compiled kernel.
+
 Modes: ``dtw`` / ``erp`` / ``dfd`` / ``lev`` (paper's four alignment
-distances).  Fixed (static) lengths per call — the matching layer buckets
-query segments by length (there are only 2*lambda_0+1 lengths, §5).
+distances).  Per-call padded shapes are static; the registry
+(``kernels/registry.py``) owns the jit cache over them.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -38,28 +54,36 @@ def _shift_right(v, fill):
 def _make_kernel(mode: str, Lx: int, Ly: int, d: int):
     W = Lx + 1
 
-    def kernel(x_ref, yr_ref, gx_ref, gyr_ref, bc_ref, br_ref, out_ref):
+    def kernel(x_ref, yr_ref, gx_ref, gyr_ref, bc_ref, br_ref, lens_ref,
+               eps_ref, out_ref, hit_ref, prune_ref):
         x = x_ref[...]          # (Bt, W, d)   x[i] = x_orig[i-1]
         yr = yr_ref[...]        # (Bt, Ypad, d) reversed+padded y
         gx = gx_ref[...]        # (Bt, W)      ERP gap cost of x_i (else 0)
         gyr = gyr_ref[...]      # (Bt, Ypad)   reversed+padded ERP gap of y
         bc = bc_ref[...]        # (Bt, Lx+1)   border column D[i,0]
         br = br_ref[...]        # (Bt, Ly+1)   border row    D[0,j]
+        lens = lens_ref[...]    # (Bt, 2)      int32 actual (len_x, len_y)
+        eps = eps_ref[...]      # (Bt, 1)      fused threshold (+inf = off)
         Bt = x.shape[0]
+        lx = lens[:, 0:1]
+        target = lx + lens[:, 1:2]   # diagonal holding D[len_x, len_y]
         ii = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
 
         diag0 = jnp.full((Bt, W), BIG, jnp.float32)
         diag0 = diag0.at[:, 0].set(bc[:, 0])
         dinit = jnp.full((Bt, W), BIG, jnp.float32)
+        res0 = jnp.where(target == 0, diag0[:, 0:1], BIG)
+        alive0 = jnp.ones((Bt, 1), jnp.bool_)
 
         def body(k, carry):
-            d1, d2 = carry  # diagonals k-1, k-2
+            d1, d2, res, alive = carry  # diagonals k-1, k-2
             s = Lx + 1 + Ly - k  # start of the diagonal window in reversed y
             ysl = jax.lax.dynamic_slice(yr, (0, s, 0), (Bt, W, d))
             if mode == "lev":
                 c = (jnp.sum(jnp.abs(x - ysl), axis=-1) > 0).astype(jnp.float32)
             else:
                 c = jnp.sqrt(jnp.maximum(jnp.sum((x - ysl) ** 2, axis=-1), 0.0))
+                c = jnp.minimum(c, BIG)
             dd = _shift_right(d2, BIG)
             du = _shift_right(d1, BIG)
             dl = d1
@@ -72,6 +96,9 @@ def _make_kernel(mode: str, Lx: int, Ly: int, d: int):
             else:  # erp
                 gy = jax.lax.dynamic_slice(gyr, (0, s), (Bt, W))
                 new = jnp.minimum(dd + c, jnp.minimum(du + gx, dl + gy))
+            # clamp: sums of quasi-infinities must stay quasi-infinite, never
+            # run off to float32 inf/NaN (long high-gap-mass series)
+            new = jnp.minimum(new, BIG)
             # border column j = 0 lives at position i = k (while k <= Lx)
             colv = jax.lax.dynamic_slice(bc, (0, jnp.minimum(k, Lx)), (Bt, 1))
             new = jnp.where((ii == k) & (k <= Lx), colv, new)
@@ -80,25 +107,40 @@ def _make_kernel(mode: str, Lx: int, Ly: int, d: int):
             new = jnp.where(ii == 0, jnp.where(k <= Ly, rowv, BIG), new)
             # outside the valid band
             new = jnp.where((ii > k) | (ii < k - Ly), BIG, new)
-            return (new, d1)
+            # record each row's answer when its target diagonal passes
+            val = jnp.sum(jnp.where(ii == lx, new, 0.0), axis=1, keepdims=True)
+            res = jnp.where(target == k, val, res)
+            # fused ε certificate: every monotone path touches one of any two
+            # consecutive diagonals, so both exceeding eps bounds the final
+            rowmin = jnp.min(jnp.minimum(new, d1), axis=1, keepdims=True)
+            alive = alive & ((rowmin <= eps) | (k > target))
+            return (new, d1, res, alive)
 
-        d1, _ = jax.lax.fori_loop(1, Lx + Ly + 1, body, (diag0, dinit))
-        out_ref[...] = d1[:, Lx:Lx + 1]
+        _, _, res, alive = jax.lax.fori_loop(
+            1, Lx + Ly + 1, body, (diag0, dinit, res0, alive0))
+        hit = res <= eps
+        out_ref[...] = jnp.where(hit, res, BIG)
+        hit_ref[...] = hit.astype(jnp.float32)
+        prune_ref[...] = (~alive).astype(jnp.float32)
 
     return kernel
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mode", "Lx", "Ly", "d", "block_b", "interpret"))
 def wavefront_pallas(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col,
-                     border_row, *, mode, Lx, Ly, d, block_b, interpret):
-    """Run the kernel on pre-laid-out inputs; see ``ops.wavefront``."""
+                     border_row, lens, eps, *, mode, Lx, Ly, d, block_b,
+                     interpret):
+    """Run the kernel on pre-laid-out inputs (traceable — the registry owns
+    jit caching; see ``registry.KernelSpec.device_call``).
+
+    Returns ``(dist, hit, pruned)`` as (B,) float32 arrays: masked
+    distances (``BIG`` where the verdict is a miss), the hit mask, and the
+    early-prune certificate mask.
+    """
     B = x_pad.shape[0]
     Ypad = y_rev_pad.shape[1]
     grid = (B // block_b,)
     kernel = _make_kernel(mode, Lx, Ly, d)
-    out = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -108,9 +150,20 @@ def wavefront_pallas(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col,
             pl.BlockSpec((block_b, Ypad), lambda b: (b, 0)),
             pl.BlockSpec((block_b, Lx + 1), lambda b: (b, 0)),
             pl.BlockSpec((block_b, Ly + 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, 2), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
         interpret=interpret,
-    )(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row)
-    return out[:, 0]
+    )(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row, lens, eps)
+    dist, hit, pruned = outs
+    return dist[:, 0], hit[:, 0] > 0, pruned[:, 0] > 0

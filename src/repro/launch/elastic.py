@@ -125,7 +125,8 @@ class ElasticIndex:
         self._retired = {"query": 0, "build": 0}
         self._merged = None     # (dead_ix, merge_flats result) serving cache
         self.device_stats = {"pivot_evals": 0, "member_evals": 0,
-                             "total_evals": 0, "device_queries": 0}
+                             "fused_pruned": 0, "total_evals": 0,
+                             "device_queries": 0}
         self.shards: Dict[str, Optional[_Shard]] = {
             w: self._build_shard(self.assignment[w]) for w in self.workers}
 
@@ -294,18 +295,17 @@ class ElasticIndex:
     def range_query_batch(self, qs: Union[np.ndarray, Sequence[np.ndarray]],
                           eps: float, *, dead: Sequence[str] = (),
                           capacity: Optional[int] = None) -> List[List[int]]:
-        """Batched fleet serving: ONE stacked device query per length
-        bucket, through ``merge_flats`` + ``fleet_range_query``.
+        """Batched fleet serving: ONE stacked device query for the whole
+        batch, through ``merge_flats`` + ``fleet_range_query``.
 
-        ``qs`` is a (Q, l[, d]) array (one bucket) or a sequence of query
-        windows whose lengths may differ (bucketed by length).  Returns the
-        sorted global hit ids per query; ``dead`` workers map onto the
-        fleet query's ``dead=`` shard mask."""
+        ``qs`` is a (Q, l[, d]) array or a sequence of query windows whose
+        lengths may differ — mixed lengths are padded to a common width and
+        ride the packed ragged-bucket kernel dispatch with per-query
+        lengths, so the fleet pays one device query per *batch*, not one
+        per length bucket.  Returns the sorted global hit ids per query;
+        ``dead`` workers map onto the fleet query's ``dead=`` shard mask."""
         from repro.core.distributed import fleet_range_query, merge_flats
         rows = [np.asarray(q) for q in qs]
-        buckets: Dict[int, List[int]] = {}
-        for i, q in enumerate(rows):
-            buckets.setdefault(len(q), []).append(i)
         flats = [self.shards[w].flat if self.shards.get(w) is not None
                  else None for w in self.workers]
         dead_ix = tuple(i for i, w in enumerate(self.workers)
@@ -319,19 +319,22 @@ class ElasticIndex:
             merged = merge_flats(alive) if len(alive) > 1 else None
             self._merged = (dead_ix, merged)
         hits: List[set] = [set() for _ in rows]
-        for qlen in sorted(buckets):
-            sel = buckets[qlen]
-            qb = np.stack([rows[i] for i in sel])
-            res, stats = fleet_range_query(
-                flats, qb, eps, dead=dead_ix, stacked=True, merged=merged,
-                capacity=capacity, interpret=self.interpret)
-            self._note_stats(stats)
-            for i, w in enumerate(self.workers):
-                if res[i] is None:
-                    continue
-                gids = self.shards[w].gids
-                for k, qi in enumerate(sel):
-                    hits[qi].update(gids[np.flatnonzero(res[i][k])].tolist())
+        if not rows:
+            return []
+        from repro.kernels.dispatch import pad_ragged_rows
+        qb, q_lens = pad_ragged_rows(rows)
+        res, stats = fleet_range_query(
+            flats, qb, eps, dead=dead_ix, stacked=True, merged=merged,
+            capacity=capacity, interpret=self.interpret,
+            q_lens=None if (q_lens == qb.shape[1]).all()
+            else q_lens.astype(np.int32))
+        self._note_stats(stats)
+        for i, w in enumerate(self.workers):
+            if res[i] is None:
+                continue
+            gids = self.shards[w].gids
+            for qi in range(len(rows)):
+                hits[qi].update(gids[np.flatnonzero(res[i][qi])].tolist())
         return [sorted(h) for h in hits]
 
     def _note_stats(self, stats: Sequence[Optional[dict]]) -> None:
@@ -348,10 +351,12 @@ class ElasticIndex:
                 seen_merged = True
                 agg["pivot_evals"] += st["fleet_pivot_evals"]
                 agg["member_evals"] += st["fleet_member_evals"]
+                agg["fused_pruned"] += st.get("fleet_fused_pruned", 0)
                 agg["total_evals"] += st["fleet_total_evals"]
             else:
                 agg["pivot_evals"] += st["pivot_evals"]
                 agg["member_evals"] += st["member_evals"]
+                agg["fused_pruned"] += st.get("fused_pruned", 0)
                 agg["total_evals"] += st["total_evals"]
         agg["device_queries"] += 1
 

@@ -20,6 +20,11 @@ execution      ``host`` (sequential frontier drive, classic counts),
                ``batched`` (PR-1 frontier engine, one dispatch per merged
                round), ``fleet`` (PR-3 elastic sharded serving)
 backend        counter backend: ``numpy | jax | pallas``
+kernel_backend device-kernel substrate override, orthogonal to
+               ``execution`` (host / batched / fleet all evaluate on it);
+               ``None`` follows ``backend``.  ``pallas`` routes every
+               dispatch through the kernel registry's packed ragged-bucket
+               dispatcher with fused ε-pruning
 lb_cascade     screen verdict frontiers with registered lower bounds
 workers        fleet worker names (or an int count); fleet execution only
 eps_prime,     index tuning knobs (reference-net radii / parent cap /
@@ -57,6 +62,7 @@ class RetrievalConfig:
     index: str = "refnet"
     execution: str = "batched"
     backend: str = "numpy"
+    kernel_backend: Optional[str] = None
     lb_cascade: bool = False
     workers: Optional[Tuple[str, ...]] = None
     eps_prime: float = 1.0
@@ -86,6 +92,11 @@ class RetrievalConfig:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend must be one of {BACKENDS}; got {self.backend!r}")
+        if self.kernel_backend is not None \
+                and self.kernel_backend not in BACKENDS:
+            raise ValueError(
+                f"kernel_backend must be one of {BACKENDS} (or None to "
+                f"follow 'backend'); got {self.kernel_backend!r}")
 
         if self.lam is not None:
             if self.lam < 2:
@@ -129,6 +140,16 @@ class RetrievalConfig:
     @property
     def dist(self) -> dist_base.Distance:
         return dist_base.resolve(self.distance)
+
+    @property
+    def effective_backend(self) -> str:
+        """The device-kernel substrate every engine evaluates on.
+
+        ``kernel_backend`` is orthogonal to ``execution``: host, batched,
+        and fleet engines all funnel their evaluations through the same
+        counter/kernel-registry substrate, and this selects it.  ``None``
+        follows the legacy ``backend`` field."""
+        return self.kernel_backend or self.backend
 
     @property
     def index_spec(self) -> registry.IndexSpec:

@@ -193,7 +193,7 @@ class _MatcherEngine:
             cfg.dist, cfg.lam, cfg.lambda0, index=cfg.index,
             eps_prime=cfg.eps_prime, num_max=cfg.num_max,
             tight_bounds=cfg.tight_bounds, mv_refs=cfg.mv_refs,
-            backend=cfg.backend, lb_cascade=cfg.lb_cascade,
+            backend=cfg.effective_backend, lb_cascade=cfg.lb_cascade,
             batched=(cfg.execution == "batched"),
             bulk_build=cfg.bulk_build).build(seqs)
 
@@ -240,7 +240,8 @@ class _WindowEngine:
         self.spec = cfg.index_spec
         dist = cfg.dist
         data = self.spec.prepare_data(data)
-        self.counter = CountedDistance(dist, data, backend=cfg.backend)
+        self.counter = CountedDistance(dist, data,
+                                       backend=cfg.effective_backend)
         self.index = self.spec.factory(dist, data, counter=self.counter,
                                        **self.spec.tuning(cfg))
         if self.spec.bulk and cfg.bulk_build:
@@ -260,20 +261,14 @@ class _WindowEngine:
         if execution == "host":
             return [self.index.range_query(q, eps, lb_cascade=cascade)
                     for q in rows]
-        # batched: ALL plans of one length bucket through one engine run
-        out: List[Optional[List[int]]] = [None] * len(rows)
-        buckets: Dict[int, List[int]] = {}
-        for i, q in enumerate(rows):
-            buckets.setdefault(len(q), []).append(i)
-        for qlen in sorted(buckets):
-            sel = buckets[qlen]
-            engine = BatchEngine(self.counter, lb_cascade=cascade)
-            res = engine.run(
-                [self.index.range_query_plan(eps) for _ in sel],
-                np.stack([rows[i] for i in sel]), eps, q_len=qlen)
-            self.rounds += engine.rounds
-            for i, r in zip(sel, res):
-                out[i] = r
+        # batched: ALL plans — every length bucket — through ONE engine run
+        # (each merged round is one packed ragged-bucket dispatch)
+        if not rows:
+            return []
+        engine = BatchEngine(self.counter, lb_cascade=cascade)
+        out = engine.run([self.index.range_query_plan(eps) for _ in rows],
+                         rows, eps)
+        self.rounds += engine.rounds
         return out
 
     def nearest_one(self, q, eps_max, tol, execution,
@@ -307,7 +302,7 @@ class _FleetEngine:
         self.cfg = cfg
         self.fleet = ElasticIndex(
             cfg.dist, data, list(cfg.workers), eps_prime=cfg.eps_prime,
-            tight_bounds=cfg.tight_bounds, backend=cfg.backend,
+            tight_bounds=cfg.tight_bounds, backend=cfg.effective_backend,
             max_cohort=cfg.max_cohort, interpret=cfg.interpret)
         self.dead: set = set()
 

@@ -1,0 +1,363 @@
+"""The unified device-kernel substrate: registry jit-cache discipline,
+packed ragged-bucket dispatch, fused ε-pruning, BIG-overflow clamping, and
+hit-set + {query, build} eval-count parity of the packed pallas path vs the
+host oracle across matcher / window / fleet modes."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import _deprecation
+from repro.core.batch_engine import BatchEngine
+from repro.core.counter import CountedDistance
+from repro.core.matching import LinearScanIndex
+from repro.distances import get, np_backend
+from repro.kernels import dispatch, ops, registry
+
+RNG = np.random.default_rng(7)
+
+
+def _strings(n, l=8, alphabet=10, rng=RNG):
+    motifs = rng.integers(0, alphabet, size=(6, l))
+    data = motifs[rng.integers(0, 6, n)]
+    m = rng.random((n, l)) < 0.2
+    return np.where(m, rng.integers(0, alphabet, size=(n, l)), data)
+
+
+def _series(n, l=8, d=2, rng=RNG):
+    steps = rng.normal(scale=0.3, size=(n, l, d))
+    return np.cumsum(steps, axis=1) + rng.normal(scale=1.0, size=(n, 1, d))
+
+
+def _ragged(name, B, Lx, Ly, rng, d=2):
+    lx = rng.integers(1, Lx + 1, B)
+    ly = rng.integers(1, Ly + 1, B)
+    if get(name).string:
+        xs = rng.integers(0, 6, size=(B, Lx))
+        ys = rng.integers(0, 6, size=(B, Ly))
+    else:
+        xs = rng.normal(size=(B, Lx, d)).astype(np.float32)
+        ys = rng.normal(size=(B, Ly, d)).astype(np.float32)
+    # zero the padding tails (rows are only defined up to their lengths)
+    for i in range(B):
+        xs[i, lx[i]:] = 0
+        ys[i, ly[i]:] = 0
+    return xs, ys, lx, ly
+
+
+# -- registry: one jit cache, one interpret policy ---------------------------
+
+
+def test_registry_covers_the_distance_registry_keys():
+    for name in ("dtw", "erp", "frechet", "levenshtein", "euclidean",
+                 "hamming"):
+        assert registry.has(name)
+        assert registry.get(name).name == name
+    assert registry.spec_for_mode("dfd").name == "frechet"
+    with pytest.raises(KeyError):
+        registry.get("nope")
+
+
+def test_registry_no_retrace_on_repeat_shapes():
+    """Satellite: layout+kernel jit once per shape class — repeat calls with
+    the same shapes must NOT retrace (the old ops.py re-laid-out and
+    re-resolved the backend per call)."""
+    registry.clear_cache()
+    xs = RNG.normal(size=(8, 6, 2)).astype(np.float32)
+    ys = RNG.normal(size=(8, 7, 2)).astype(np.float32)
+    spec = registry.get("dtw")
+    spec.batch(xs, ys)
+    t0 = registry.STATS["traces"]
+    assert t0 >= 1
+    spec.batch(xs, ys)
+    spec.batch(xs * 2.0, ys - 1.0)       # same shapes, new values
+    assert registry.STATS["traces"] == t0, "same-shape call retraced"
+    # fused eps is an operand, not a static: still no retrace
+    spec.batch(xs, ys, eps=1.0)
+    assert registry.STATS["traces"] == t0
+    # a genuinely new shape class traces exactly once more
+    spec.batch(xs[:, :5], ys)
+    assert registry.STATS["traces"] == t0 + 1
+
+
+def test_ops_wavefront_no_retrace_on_repeat():
+    xs, ys = _series(6, 5), _series(6, 5)
+    ops.wavefront(xs, ys, "erp", interpret=True)
+    t0 = registry.STATS["traces"]
+    ops.wavefront(xs * 0.5, ys, "erp", interpret=True)
+    assert registry.STATS["traces"] == t0
+
+
+# -- satellite: BIG-sentinel overflow clamp ----------------------------------
+
+
+def test_erp_big_clamp_long_high_gap_mass_series():
+    """Quasi-infinity arithmetic must saturate at BIG, never run off to
+    float32 inf/NaN: extreme gap masses blow up the ERP border cumsums
+    (squares overflow -> inf gaps -> inf borders) without the clamps."""
+    L = 48
+    xs = np.full((8, L, 1), 1e25, np.float32)
+    ys = np.full((8, L, 1), -1e25, np.float32)
+    got = np.asarray(ops.wavefront(xs, ys, "erp", interpret=True))
+    ref = np.asarray(ops.wavefront_ref(xs, ys, "erp"))
+    assert np.isfinite(got).all(), "kernel leaked inf/NaN past the clamp"
+    assert np.isfinite(ref).all(), "jnp oracle leaked inf/NaN past the clamp"
+    np.testing.assert_allclose(got, ref, rtol=1e-4)
+    # verdicts at any sane radius still reject, fused path included
+    out = dispatch.packed_batch("erp", xs, ys, eps=1e6)
+    assert not out.hit.any()
+    assert np.isfinite(out.dist).all()
+
+
+def test_dtw_big_clamp_stays_finite():
+    xs = np.full((8, 32, 1), 3e24, np.float32)
+    ys = -xs
+    got = np.asarray(ops.wavefront(xs, ys, "dtw", interpret=True))
+    assert np.isfinite(got).all()
+
+
+# -- packed ragged-bucket dispatch -------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["dtw", "erp", "frechet", "levenshtein"])
+def test_packed_dispatch_matches_numpy_oracle_ragged(name):
+    rng = np.random.default_rng(11)
+    xs, ys, lx, ly = _ragged(name, 11, 9, 7, rng)
+    out = dispatch.packed_batch(name, xs, ys, lx, ly)
+    want = np_backend.batch_for(name)(xs, ys, lx, ly)
+    np.testing.assert_allclose(out.dist, want, rtol=1e-4, atol=1e-4)
+    # bucket metadata reflects the sorted ragged layout
+    meta = dispatch.STATS.last_meta
+    assert meta is not None
+    assert sum(c for _, _, c in meta.buckets) == 11
+
+
+@pytest.mark.parametrize("name", ["levenshtein", "erp"])
+def test_fused_eps_masks_and_certificates(name):
+    rng = np.random.default_rng(3)
+    B = 16
+    if get(name).string:
+        xs = rng.integers(0, 5, size=(B, 10))
+        ys = np.where(rng.random((B, 10)) < 0.3,
+                      rng.integers(0, 5, size=(B, 10)), xs)
+    else:
+        xs = rng.normal(size=(B, 10, 2)).astype(np.float32)
+        ys = (xs + rng.normal(scale=0.4, size=xs.shape)).astype(np.float32)
+    want = np_backend.batch_for(name)(xs, ys)
+    u = np.unique(want)
+    # threshold strictly between two achieved values: verdicts are stable
+    eps = float(u[:2].mean()) if len(u) > 1 else float(u[0]) + 0.5
+    out = dispatch.packed_batch(name, xs, ys, eps=eps)
+    assert np.array_equal(out.hit, want <= eps)
+    np.testing.assert_allclose(out.dist[out.hit], want[out.hit],
+                               rtol=1e-4, atol=1e-4)
+    # misses never materialize distances; prune certificates imply misses
+    assert (out.dist[~out.hit] >= 3e37).all()
+    assert not out.pruned[out.hit].any()
+
+
+def test_counter_pallas_accepts_mixed_length_dispatches():
+    """Acceptance: the old 'single length bucket per dispatch' ValueError
+    path is gone, and padding rows never reach the eval counters."""
+    data = _strings(16, l=8)
+    dist = get("levenshtein")
+    pal = CountedDistance(dist, data, backend="pallas")
+    ref = CountedDistance(dist, data, backend="numpy")
+    rng = np.random.default_rng(5)
+    lens = rng.integers(4, 9, 12)
+    qs = np.zeros((12, 8), data.dtype)
+    for i, ln in enumerate(lens):
+        qs[i, :ln] = data[i, :ln]
+    idxs = rng.integers(0, len(data), 12)
+    got = pal.eval_stacked(qs, idxs, q_len=lens)
+    want = ref.eval_stacked(qs, idxs, q_len=lens)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # one dispatch, 12 exact evals — power-of-two padding rows not counted
+    assert pal.dispatches == 1 and pal.count == 12
+
+
+def test_packed_engine_one_dispatch_per_round_across_buckets():
+    """Acceptance: BatchEngine goes from one dispatch per round per length
+    bucket to one dispatch per round."""
+    data = _strings(40, l=8)
+    idx = LinearScanIndex(get("levenshtein"), data).build()
+    rng = np.random.default_rng(9)
+    rows = [data[i][:ln] for i, ln in
+            zip(range(9), rng.integers(6, 9, 9))]
+    n_buckets = len({len(r) for r in rows})
+    assert n_buckets > 1
+    idx.counter.reset()
+    engine = BatchEngine(idx.counter)
+    packed = engine.run([idx.range_query_plan(2.0) for _ in rows], rows, 2.0)
+    assert engine.rounds == 1 and idx.counter.dispatches == 1
+    # legacy per-bucket driving: one dispatch per bucket
+    idx.counter.reset()
+    legacy = []
+    for ln in sorted({len(r) for r in rows}):
+        sel = [r for r in rows if len(r) == ln]
+        eng = BatchEngine(idx.counter)
+        legacy.append((ln, eng.run(
+            [idx.range_query_plan(2.0) for _ in sel], np.stack(sel), 2.0)))
+    assert idx.counter.dispatches == n_buckets
+    flat = {}
+    for ln, res in legacy:
+        flat[ln] = list(res)
+    for r, hits in zip(rows, packed):
+        assert hits == flat[len(r)].pop(0)
+
+
+def test_fused_engine_hits_and_counts_match_host():
+    """Fused ε on pallas engine rounds preserves hit sets AND the exact
+    eval counts (pruning is a device-side wall-clock effect, not a count
+    change)."""
+    data = _strings(48, l=8)
+    dist = get("levenshtein")
+    host = LinearScanIndex(dist, data).build()
+    queries = data[:5]
+    host.counter.reset()
+    want = [host.range_query(q, 2.0) for q in queries]
+    want_count = host.counter.count
+
+    pal = LinearScanIndex(
+        dist, data, counter=CountedDistance(dist, data,
+                                            backend="pallas")).build()
+    pal.counter.reset()
+    engine = BatchEngine(pal.counter)
+    got = engine.run([pal.range_query_plan(2.0) for _ in queries],
+                     queries, 2.0)
+    assert got == want
+    assert pal.counter.count == want_count
+
+
+# -- deprecation shim ---------------------------------------------------------
+
+
+def test_batch_dist_shim_warns_and_delegates():
+    from repro.core import distributed
+    xs = _series(4, 6)
+    ys = _series(4, 6)
+    with pytest.warns(DeprecationWarning, match="kernels.registry"):
+        got = np.asarray(distributed._batch_dist("dtw", xs, ys))
+    want = np.asarray(
+        registry.get("dtw").device_call(xs, ys, interpret=True).dist)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    # facade-style internal delegation stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with _deprecation.facade_construction():
+            distributed._batch_dist("euclidean", xs, ys)
+
+
+# -- packed pallas path vs host oracle: matcher / window / fleet -------------
+
+
+def _parity_window(dist_name, index, seed=0):
+    from repro.retrieval import RetrievalConfig, Retriever
+    rng = np.random.default_rng(seed)
+    data = _strings(50, l=8, rng=rng) if get(dist_name).string \
+        else _series(50, l=8, rng=rng)
+    eps = 2.0 if get(dist_name).string else 1.0
+    queries = [data[i][:ln] for i, ln in
+               zip((3, 11, 27, 40), (6, 8, 7, 8))]
+    cfg = dict(index=index, eps_prime=1.0, tight_bounds=(index == "refnet"))
+    host = Retriever.build(RetrievalConfig(dist_name, **cfg), data)
+    want = host.batch(queries).via("host").range(eps)
+    pal = Retriever.build(
+        RetrievalConfig(dist_name, kernel_backend="pallas", **cfg), data)
+    got = pal.batch(queries).via("batched").range(eps)
+    assert got.hits == want.hits, f"{dist_name}/{index} hit-set drift"
+    assert got.stats["query"] == want.stats["query"]
+    assert pal.eval_stats()["build"] == host.eval_stats()["build"]
+
+
+@pytest.mark.parametrize("dist_name,index",
+                         [("levenshtein", "refnet"), ("erp", "refnet"),
+                          ("frechet", "linear"), ("dtw", "linear")])
+def test_window_mode_packed_pallas_matches_host(dist_name, index):
+    _parity_window(dist_name, index)
+
+
+@pytest.mark.parametrize("dist_name,index",
+                         [("levenshtein", "refnet"), ("erp", "linear"),
+                          ("frechet", "linear"), ("dtw", "linear")])
+def test_matcher_mode_packed_pallas_matches_host(dist_name, index):
+    from repro.retrieval import RetrievalConfig, Retriever
+    rng = np.random.default_rng(2)
+    if get(dist_name).string:
+        seqs = [rng.integers(0, 6, size=(30,)) for _ in range(2)]
+        Q = rng.integers(0, 6, size=(14,))
+        Q[2:10] = seqs[0][4:12]
+        eps = 1.5
+    else:
+        seqs = [np.cumsum(rng.normal(scale=0.3, size=(30, 2)), 0)
+                for _ in range(2)]
+        Q = seqs[0][3:17] + rng.normal(scale=0.05, size=(14, 2))
+        eps = 1.0
+    cfg = dict(lam=8, lambda0=1, index=index, eps_prime=1.0)
+    host = Retriever.build(
+        RetrievalConfig(dist_name, execution="host", **cfg), seqs)
+    want = host.query(Q).range(eps)
+    pal = Retriever.build(
+        RetrievalConfig(dist_name, kernel_backend="pallas", **cfg), seqs)
+    got = pal.query(Q).range(eps)
+    assert sorted(m.key() for m in got.hits) == \
+        sorted(m.key() for m in want.hits)
+    assert got.stats["query"] == want.stats["query"]
+    assert pal.eval_stats()["build"] == host.eval_stats()["build"]
+
+
+@pytest.mark.parametrize("dist_name", ["levenshtein", "erp", "frechet"])
+def test_fleet_mode_packed_pallas_matches_host(dist_name):
+    from repro.retrieval import RetrievalConfig, Retriever
+    rng = np.random.default_rng(4)
+    data = _strings(60, l=8, rng=rng) if get(dist_name).string \
+        else _series(60, l=8, rng=rng)
+    eps = 2.0 if get(dist_name).string else 1.0
+    r = Retriever.build(
+        RetrievalConfig(dist_name, execution="fleet", workers=2,
+                        kernel_backend="pallas", tight_bounds=True), data)
+    # mixed-length query batch: one packed device call, not one per bucket
+    queries = [data[i][:ln] for i, ln in zip((1, 7, 22, 41), (7, 8, 8, 6))]
+    want = r.batch(queries).via("host").range(eps)
+    got = r.batch(queries).range(eps)
+    assert got.hits == want.hits, f"{dist_name} fleet packed drift"
+    assert r.eval_stats()["build"] > 0
+
+
+# -- rectangular / multi-dim parity sweep (satellite) ------------------------
+
+
+_SWEEP = [(1, 1, 1, 1), (3, 5, 9, 1), (4, 9, 5, 3), (6, 12, 12, 2),
+          (5, 2, 11, 2)]
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1),
+           st.sampled_from(["dtw", "erp", "frechet", "levenshtein"]),
+           st.integers(1, 3))
+    def test_wavefront_rect_multidim_parity_property(seed, name, d):
+        rng = np.random.default_rng(seed)
+        B = int(rng.integers(1, 6))
+        Lx = int(rng.integers(1, 11))
+        Ly = int(rng.integers(1, 11))
+        xs, ys, lx, ly = _ragged(name, B, Lx, Ly, rng, d=d)
+        want = np_backend.batch_for(name)(xs, ys, lx, ly)
+        out = dispatch.packed_batch(name, xs, ys, lx, ly)
+        np.testing.assert_allclose(out.dist, want, rtol=1e-4, atol=1e-4)
+else:
+    @pytest.mark.parametrize("name", ["dtw", "erp", "frechet", "levenshtein"])
+    @pytest.mark.parametrize("shape", _SWEEP)
+    def test_wavefront_rect_multidim_parity_property(name, shape):
+        B, Lx, Ly, d = shape
+        rng = np.random.default_rng(B * 100 + Lx)
+        xs, ys, lx, ly = _ragged(name, B, Lx, Ly, rng, d=d)
+        want = np_backend.batch_for(name)(xs, ys, lx, ly)
+        out = dispatch.packed_batch(name, xs, ys, lx, ly)
+        np.testing.assert_allclose(out.dist, want, rtol=1e-4, atol=1e-4)
