@@ -66,12 +66,12 @@ def run(full: bool = False):
     dt = (time.perf_counter() - t0) * 1e6 / len(qs)
     out.append(row("fleet_query_4shards", dt,
                    evals=loop.stats["query"]))
-    r.batch(qs).range(2.0)  # warm the stacked jit
+    r.batch(qs).range(2.0)  # warm the round-based (default) serving path
     t0 = time.perf_counter()
-    stacked = r.batch(qs).range(2.0)
+    rounds = r.batch(qs).range(2.0)
     dt = (time.perf_counter() - t0) * 1e6 / len(qs)
-    out.append(row("fleet_query_4shards_stacked", dt,
-                   device_evals=stacked.stats["device_evals"]))
+    out.append(row("fleet_query_4shards_rounds", dt,
+                   device_evals=rounds.stats["device_evals"]))
     build_before = r.eval_stats()["build"]
     t0 = time.perf_counter()
     frac = r.elastic().resize([f"w{i}" for i in range(5)])

@@ -50,12 +50,19 @@ integer vector of **data indices** — the pairwise (node-vs-node) mode used
 by bulk construction, where plan ``i``'s left-hand side is
 ``counter.data[queries[i]]``.  Everything else (round merging, one dispatch
 per round, per-plan send) is identical.
+
+A third driver, :class:`FleetBatchEngine`, extends the round merge *across
+shards*: every alive shard of the elastic fleet contributes its own plans
+(over its own shard-local database), and each merged round is still ONE
+evaluator call — the round-based fleet serving path (`launch/elastic.py`,
+``mode="rounds"``) that keeps the frontier's pruning while paying device
+dispatches per round, not per shard per query per round.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Generator, List, Optional, Sequence
+from typing import Dict, Generator, List, Optional, Sequence
 
 import numpy as np
 
@@ -237,6 +244,124 @@ class BatchEngine:
                     new_state[i] = plans[i].send(ds[off:off + m])
                 except StopIteration as stop:
                     results[i] = stop.value if stop.value is not None else []
+                off += m
+            state = new_state
+        return results  # type: ignore[return-value]
+
+
+@dataclasses.dataclass
+class ShardPlans:
+    """One shard's contribution to a cross-shard frontier run.
+
+    ``plans[i]`` is a range-query plan over this shard's *local* database
+    (frontier idxs index ``data``); ``queries`` holds one padded query row
+    per plan with ``q_lens`` giving the actual lengths (ragged batches share
+    one padded width across the whole fleet).  ``shard`` is the provenance
+    id (the fleet worker slot) that rides every evaluated row into the
+    packed dispatcher's per-shard accounting."""
+    shard: int
+    data: np.ndarray                # (rows, l[, d]) shard-local windows
+    plans: Sequence[Plan]
+    queries: np.ndarray             # (n_plans, W[, d]) padded query rows
+    q_lens: np.ndarray              # (n_plans,) actual query lengths
+
+
+class FleetBatchEngine:
+    """Cross-shard frontier merge: one evaluator call per merged round.
+
+    :class:`BatchEngine` merges concurrent plans over ONE database;
+    this engine merges plans over MANY shard-local databases — the
+    round-based fleet serving path.  Each round it concatenates every
+    alive plan's frontier (survivors only — plans that finished, and dead
+    workers' plans that were never admitted, simply contribute no rows),
+    gathers candidate windows from each plan's own shard, and issues ONE
+    ``evaluate`` call spanning all shards and all length buckets.  On a
+    fused backend, VERDICT rows carry the query ε (pruned candidates never
+    have distances materialized — the kernel returns verdict-masked
+    sentinels), EXACT rows opt out via ``+inf``, exactly as in
+    :class:`BatchEngine`.
+
+    Evaluation accounting is the caller's: the engine tallies
+    ``exact_evals`` / ``verdict_evals`` (requested rows only — backend
+    padding never reaches it), per-shard row provenance in ``shard_rows``,
+    and the fused-prune certificate count, and the elastic layer folds
+    those into ``ElasticIndex.device_stats`` — never into the shards' host
+    counters, so the ``{query, build}`` buckets stay host-path currency.
+    Frontier sequences are identical to driving each plan sequentially, so
+    total evaluations match the host per-shard loop row for row.
+    """
+
+    def __init__(self, evaluate, *, fused: bool = False):
+        #: ``evaluate(xs, ys, lx, ly, eps_rows, shard_ids) -> (dists,
+        #: n_pruned)`` — one backend call per merged round
+        self.evaluate = evaluate
+        self.fused = fused
+        self.rounds = 0
+        self.exact_evals = 0
+        self.verdict_evals = 0
+        self.fused_pruned = 0
+        self.shard_rows: Dict[int, int] = {}
+
+    def run(self, groups: Sequence[ShardPlans], eps: float
+            ) -> List[List[List[int]]]:
+        """Drive every group's plans in lockstep; returns per-group,
+        per-plan results (shard-local hit lists, same order as ``plans``)."""
+        results: List[List[Optional[List[int]]]] = [
+            [None] * len(g.plans) for g in groups]
+
+        state = {}
+        for g, grp in enumerate(groups):
+            for i, p in enumerate(grp.plans):
+                try:
+                    state[(g, i)] = next(p)
+                except StopIteration as stop:
+                    results[g][i] = stop.value if stop.value is not None \
+                        else []
+
+        while state:
+            order = sorted(state)
+            sizes = [state[k].idxs.size for k in order]
+            xs_parts, ys_parts, lx_parts, ly_parts = [], [], [], []
+            shard_parts, verdict_parts = [], []
+            for k, m in zip(order, sizes):
+                g, i = k
+                grp = groups[g]
+                fr = state[k]
+                xs_parts.append(np.repeat(grp.queries[i][None], m, 0))
+                ys_parts.append(grp.data[fr.idxs])
+                lx_parts.append(np.full(m, int(grp.q_lens[i]), np.int64))
+                ly_parts.append(np.full(m, grp.data.shape[1], np.int64))
+                shard_parts.append(np.full(m, grp.shard, np.int64))
+                verdict_parts.append(np.full(m, fr.kind == VERDICT))
+                self.shard_rows[grp.shard] = \
+                    self.shard_rows.get(grp.shard, 0) + m
+            xs = np.concatenate(xs_parts)
+            ys = np.concatenate(ys_parts)
+            lx = np.concatenate(lx_parts)
+            ly = np.concatenate(ly_parts)
+            shard_ids = np.concatenate(shard_parts)
+            verdict = np.concatenate(verdict_parts)
+
+            eps_rows = None
+            if self.fused:
+                eps_rows = np.where(verdict, np.float32(eps),
+                                    np.float32(np.inf))
+            ds, n_pruned = self.evaluate(xs, ys, lx, ly, eps_rows, shard_ids)
+            ds = np.asarray(ds, np.float32)
+            self.rounds += 1
+            self.exact_evals += int((~verdict).sum())
+            self.verdict_evals += int(verdict.sum())
+            self.fused_pruned += int(n_pruned)
+
+            new_state = {}
+            off = 0
+            for k, m in zip(order, sizes):
+                g, i = k
+                try:
+                    new_state[k] = groups[g].plans[i].send(ds[off:off + m])
+                except StopIteration as stop:
+                    results[g][i] = stop.value if stop.value is not None \
+                        else []
                 off += m
             state = new_state
         return results  # type: ignore[return-value]

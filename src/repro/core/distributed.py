@@ -22,6 +22,15 @@ the static capacity is the TPU translation of data-dependent work.  The
 fleet version shard_maps this over the data axis (stacked per-shard arrays)
 with queries replicated; results are exact unions, since shards partition
 the windows.
+
+Since PR 6 this one-shot stacked fleet query is the elastic layer's
+*fallback* serving mode (``ElasticIndex(..., fleet_mode="oneshot")``): it
+pays exactly one device dispatch per batch, but only the flat pivot/ring
+bounds prune.  The default fleet path is round-based — shard-local
+frontier plans merged per round through the packed fused-ε dispatcher
+(``core/batch_engine.FleetBatchEngine`` + ``kernels/dispatch.py``) — which
+keeps the reference net's full pruning power (see ``launch/elastic.py``
+and ``docs/architecture.md``).
 """
 
 from __future__ import annotations
@@ -194,12 +203,15 @@ def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
 
 
 def _batch_dist(dist_name: str, qs, xs, interpret=True):
-    """Deprecated shim: batched distance now lives in the kernel registry.
-
-    The device query path composes :meth:`KernelSpec.device_call` directly;
-    this wrapper keeps external callers working for one release (the
-    warning is suppressed inside facade-internal construction, mirroring
-    the legacy-constructor shims)."""
+    """Deprecated since v0.1, removed in v0.2: batched distance lives in
+    the kernel registry — call
+    ``repro.kernels.registry.get(name).device_call(qs, xs)`` (or, from the
+    facade, serve through ``repro.retrieval.Retriever``, which never needs
+    a raw batched distance).  The device query path composes
+    :meth:`KernelSpec.device_call` directly; this wrapper keeps external
+    callers working for one release (the warning is suppressed inside
+    facade-internal construction, mirroring the legacy-constructor
+    shims)."""
     _deprecation.warn_moved("core.distributed._batch_dist",
                             "repro.kernels.registry.get(name).device_call")
     return kernel_registry.get(dist_name).device_call(
@@ -358,6 +370,11 @@ def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
                       merged: Optional[Tuple[FlatNet, List[int]]] = None,
                       **kw):
     """Union of per-shard device queries (shards partition the windows).
+
+    This is the fleet's *one-shot* serving primitive — since PR 6 the
+    elastic layer's fallback mode (``mode="oneshot"``); default serving
+    goes round-based through ``FleetBatchEngine`` instead, which prunes
+    with the full reference-net frontier (see ``launch/elastic.py``).
 
     ``dead`` shards are skipped (the elastic layer rebuilds them); the
     returned mask is per-shard so the caller can re-issue stolen work.

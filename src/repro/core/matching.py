@@ -94,9 +94,14 @@ class _IndexTuning:
 
 
 class SubsequenceMatcher:
-    """The 5-step pipeline.  Deprecated as a *direct* public entry point —
-    build through ``repro.retrieval.Retriever`` instead; the facade
-    delegates here, so behavior and counts are identical."""
+    """The 5-step pipeline.  Deprecated as a *direct* public entry point
+    since v0.1 — build through the facade instead::
+
+        repro.retrieval.Retriever.build(
+            RetrievalConfig(dist, lam=..., lambda0=...), seqs)
+
+    The facade delegates here, so behavior and counts are identical; this
+    constructor shim will be removed in v0.2."""
 
     def __init__(self, dist: Union[str, dist_base.Distance], lam: int,
                  lambda0: int = 1, *,

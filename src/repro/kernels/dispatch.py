@@ -29,7 +29,7 @@ established for the device query path).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -43,10 +43,17 @@ class PackedMeta:
     buckets: Tuple[Tuple[int, int, int], ...]
     #: row offset of each bucket in the sorted layout
     offsets: Tuple[int, ...]
+    #: ``(shard, count)`` row provenance when the dispatch spans a fleet
+    #: round (cross-shard frontier merge); None for single-source dispatches
+    shard_rows: Optional[Tuple[Tuple[int, int], ...]] = None
 
     @property
     def n_buckets(self) -> int:
         return len(self.buckets)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_rows) if self.shard_rows else 1
 
 
 @dataclasses.dataclass
@@ -56,6 +63,8 @@ class DispatchStats:
     bucket_rounds: int = 0  # calls a per-bucket dispatcher would have issued
     rows: int = 0           # requested rows (excl. any padding)
     pruned: int = 0         # rows certified > eps before their last diagonal
+    #: rows per fleet shard across cross-shard (round-based fleet) dispatches
+    shard_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
     last_meta: Optional[PackedMeta] = None
 
     def reset(self) -> None:
@@ -63,6 +72,7 @@ class DispatchStats:
         self.bucket_rounds = 0
         self.rows = 0
         self.pruned = 0
+        self.shard_rows = {}
         self.last_meta = None
 
 
@@ -101,14 +111,19 @@ def pack_meta(lx: np.ndarray, ly: np.ndarray
 
 
 def packed_batch(name: str, xs, ys, lx=None, ly=None, *, eps=None,
-                 block_b: int = 8, interpret: Optional[bool] = None
-                 ) -> registry.KernelOut:
+                 block_b: int = 8, interpret: Optional[bool] = None,
+                 shards=None) -> registry.KernelOut:
     """ONE padded device call over every length bucket of a round.
 
     ``xs``/``ys`` are row-paired batches whose rows may come from different
     ``(len_x, len_y)`` buckets (``lx``/``ly`` carry the actual lengths);
     ``eps`` (scalar or per-row; +inf rows opt out) enables fused ε-pruning.
-    Results come back in the caller's row order as numpy arrays.
+    ``shards`` optionally carries per-row provenance (the fleet worker slot
+    each row's candidate window lives on) when a round-based fleet query
+    merges frontiers across shards — recorded in :data:`STATS` and
+    :class:`PackedMeta` so the benches can show a fleet round really is one
+    dispatch, not one per shard.  Results come back in the caller's row
+    order as numpy arrays.
     """
     spec = registry.get(name)
     xs = np.asarray(xs)
@@ -134,6 +149,15 @@ def packed_batch(name: str, xs, ys, lx=None, ly=None, *, eps=None,
     inv[order] = np.arange(B)
     result = registry.KernelOut(out.dist[inv], out.hit[inv], out.pruned[inv])
 
+    if shards is not None:
+        sid, cnt = np.unique(np.asarray(shards, np.int64),
+                             return_counts=True)
+        for s, c in zip(sid, cnt):
+            STATS.shard_rows[int(s)] = \
+                STATS.shard_rows.get(int(s), 0) + int(c)
+        meta = dataclasses.replace(
+            meta, shard_rows=tuple((int(s), int(c))
+                                   for s, c in zip(sid, cnt)))
     STATS.dispatches += 1
     STATS.bucket_rounds += meta.n_buckets
     STATS.rows += B

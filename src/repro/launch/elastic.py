@@ -28,17 +28,32 @@ substrate rather than a host-only wrapper:
   (or the rare shard whose *root* window moved away) pays a full build, so
   an N->N+1 resize re-spends ~1/N of the original ``build``-bucket cost
   (gated in ``benchmarks/bench_elastic.py``).
-* **Serving** — :meth:`ElasticIndex.range_query` (``batched=True``, the
-  default) routes the whole fleet through
-  :func:`~repro.core.distributed.fleet_range_query`: the alive shards'
-  FlatNets are stacked by ``merge_flats`` into ONE device query per query
-  length bucket, and the resulting per-shard hit-mask columns are
-  translated back to global window ids through each shard's ``gids`` map.
-  ``dead`` workers map onto the fleet query's ``dead=`` shard mask, so a
-  lost worker degrades the answer to the union of the survivors (exact on
-  their partitions) until the caller ``resize``\\ s it away.
-  ``batched=False`` keeps the classic host per-shard pointer-chasing loop
-  — same hit sets, used as the parity oracle.
+* **Serving** — :meth:`ElasticIndex.range_query_batch` answers the fleet
+  in one of two batched modes:
+
+  - ``mode="rounds"`` (the default): the **shared-frontier, round-based
+    path**.  Every alive shard contributes one Alg.-3 range-query plan per
+    query, and a :class:`~repro.core.batch_engine.FleetBatchEngine` drives
+    them all in lockstep — each merged round is ONE evaluator call across
+    all shards and all length buckets (the packed ragged-bucket kernel
+    dispatch with fused ε-pruning on the ``pallas`` backend), with hit
+    lists flowing back through each shard's ``gids`` to global ids.  The
+    frontier's round-by-round pruning is preserved exactly: evaluation
+    counts match the host per-shard loop row for row, tallied in
+    :attr:`ElasticIndex.device_stats` (never the host counters).
+  - ``mode="oneshot"``: the legacy stacked path — the alive shards'
+    FlatNets merge via ``merge_flats`` into ONE
+    :func:`~repro.core.distributed.fleet_range_query` device call.  One
+    dispatch total, but only the flat net's pivot/ring bounds prune, so it
+    evaluates far more candidates than the frontier does (kept for
+    single-dispatch serving and as the stacked parity path).
+
+  ``dead`` workers are masked out of either path (their plans are never
+  admitted / their columns never merged), so a lost worker degrades the
+  answer to the union of the survivors (exact on their partitions) until
+  the caller ``resize``\\ s it away.  ``batched=False`` on
+  :meth:`ElasticIndex.range_query` keeps the classic host per-shard
+  pointer-chasing loop — same hit sets, used as the parity oracle.
 
 Accounting: :meth:`ElasticIndex.eval_count` reports the fleet's host-side
 counter totals as separate ``{"query", "build"}`` buckets (construction
@@ -97,22 +112,37 @@ class _Shard:
     gids: np.ndarray            # (rows,) local row -> global window id
 
 
+#: batched serving modes: shared-frontier rounds vs the legacy one-shot
+#: stacked device query (see the module docstring)
+FLEET_MODES = ("rounds", "oneshot")
+
+
 class ElasticIndex:
     """A set of per-shard reference nets that reshard incrementally and
-    serve batched fleet queries as one stacked device query.
+    serve batched fleet queries round-based (shared frontier) or as one
+    stacked device query.
 
-    Deprecated as a *direct* public entry point — build through
-    ``repro.retrieval.Retriever`` with ``execution='fleet'`` instead; the
-    facade delegates here, so behavior and counts are identical.
+    Deprecated as a *direct* public entry point since v0.1 — build through
+    the facade instead::
+
+        repro.retrieval.Retriever.build(
+            RetrievalConfig(dist, execution="fleet", workers=...), data)
+
+    The facade delegates here, so behavior and counts are identical; this
+    constructor shim will be removed in v0.2.
     ``dist`` accepts a registry name or a ``Distance`` instance."""
 
     def __init__(self, dist, data: np.ndarray, workers: List[str],
                  *, eps_prime: float = 1.0, tight_bounds: bool = True,
                  backend: str = "numpy", max_cohort: int = 256,
-                 interpret: bool = True):
+                 interpret: bool = True, fleet_mode: str = "rounds"):
         from repro.core import _deprecation
         from repro.distances import base as dist_base
         _deprecation.warn_legacy("ElasticIndex")
+        if fleet_mode not in FLEET_MODES:
+            raise ValueError(
+                f"fleet_mode must be one of {FLEET_MODES}; "
+                f"got {fleet_mode!r}")
         self.dist = dist_base.require_metric(dist)
         self.data = np.asarray(data)
         self.eps_prime = eps_prime
@@ -120,13 +150,15 @@ class ElasticIndex:
         self.backend = backend
         self.max_cohort = max_cohort
         self.interpret = interpret
+        self.fleet_mode = fleet_mode
         self.workers = list(workers)
         self.assignment = assign(range(len(data)), self.workers)
         self._retired = {"query": 0, "build": 0}
         self._merged = None     # (dead_ix, merge_flats result) serving cache
+        self._round_eval = None  # resolved (evaluate, fused) for mode=rounds
         self.device_stats = {"pivot_evals": 0, "member_evals": 0,
                              "fused_pruned": 0, "total_evals": 0,
-                             "device_queries": 0}
+                             "rounds": 0, "device_queries": 0}
         self.shards: Dict[str, Optional[_Shard]] = {
             w: self._build_shard(self.assignment[w]) for w in self.workers}
 
@@ -271,13 +303,15 @@ class ElasticIndex:
     def range_query(self, q: np.ndarray, eps: float,
                     q_len: Optional[int] = None, dead: Sequence[str] = (),
                     *, batched: bool = True,
-                    capacity: Optional[int] = None) -> List[int]:
+                    capacity: Optional[int] = None,
+                    mode: Optional[str] = None) -> List[int]:
         """Fleet-wide query = union over shards (exact).  ``dead`` workers
         are skipped — results degrade gracefully and the caller can retry
         after `resize` (fault tolerance path).
 
-        ``batched=True`` (default) serves through the stacked device fleet
-        query; ``batched=False`` is the host per-shard loop (same hits)."""
+        ``batched=True`` (default) serves through the batched fleet path
+        (``mode``: see :meth:`range_query_batch`); ``batched=False`` is the
+        host per-shard loop (same hits)."""
         q = np.asarray(q)
         qlen = len(q) if q_len is None else int(q_len)
         if not batched:
@@ -290,26 +324,123 @@ class ElasticIndex:
                     out.append(int(s.gids[local]))
             return sorted(out)
         return self.range_query_batch([q[:qlen]], eps, dead=dead,
-                                      capacity=capacity)[0]
+                                      capacity=capacity, mode=mode)[0]
 
     def range_query_batch(self, qs: Union[np.ndarray, Sequence[np.ndarray]],
                           eps: float, *, dead: Sequence[str] = (),
-                          capacity: Optional[int] = None) -> List[List[int]]:
-        """Batched fleet serving: ONE stacked device query for the whole
-        batch, through ``merge_flats`` + ``fleet_range_query``.
+                          capacity: Optional[int] = None,
+                          mode: Optional[str] = None) -> List[List[int]]:
+        """Batched fleet serving for a whole query batch.
+
+        ``mode`` (default: the constructor's ``fleet_mode``, ``"rounds"``):
+
+        * ``"rounds"`` — shared-frontier round-based serving: every alive
+          shard runs one Alg.-3 range-query plan per query, all plans
+          advance in lockstep, and each merged round is ONE evaluator call
+          across all shards and all length buckets (the packed fused-ε
+          kernel dispatch on the ``pallas`` backend).  Pruning — and the
+          evaluation count — is identical to the host per-shard loop.
+        * ``"oneshot"`` — the legacy stacked path: ``merge_flats`` + ONE
+          ``fleet_range_query`` device call for the whole batch
+          (``capacity`` applies here).
 
         ``qs`` is a (Q, l[, d]) array or a sequence of query windows whose
-        lengths may differ — mixed lengths are padded to a common width and
-        ride the packed ragged-bucket kernel dispatch with per-query
-        lengths, so the fleet pays one device query per *batch*, not one
-        per length bucket.  Returns the sorted global hit ids per query;
-        ``dead`` workers map onto the fleet query's ``dead=`` shard mask."""
-        from repro.core.distributed import fleet_range_query, merge_flats
+        lengths may differ — mixed lengths ride the packed ragged-bucket
+        dispatch with per-query lengths.  Returns the sorted global hit
+        ids per query; ``dead`` workers are masked out of either path."""
+        mode = self.fleet_mode if mode is None else mode
+        if mode not in FLEET_MODES:
+            raise ValueError(
+                f"mode must be one of {FLEET_MODES}; got {mode!r}")
         rows = [np.asarray(q) for q in qs]
+        if not rows:
+            return []
+        dead_ix = tuple(i for i, w in enumerate(self.workers)
+                        if w in dead or self.shards.get(w) is None)
+        if mode == "rounds":
+            return self._round_query(rows, eps, dead_ix)
+        return self._oneshot_query(rows, eps, dead_ix, capacity)
+
+    # -- round-based serving (shared frontier, fused-ε pruning) -------------
+
+    def _round_evaluator(self):
+        """Resolve the round evaluator once: ``(evaluate, fused)``.
+
+        On the ``pallas`` backend (with a registered kernel) a merged round
+        goes straight through the packed ragged-bucket dispatcher with
+        per-row shard provenance and fused ε-pruning — the kernel returns
+        the hit verdict and never materializes pruned candidates'
+        distances.  Other backends evaluate the round in one host batch
+        call (values still preserve every ``<= eps`` verdict)."""
+        if self._round_eval is not None:
+            return self._round_eval
+        from repro.kernels import registry as kernel_registry
+        if self.backend == "pallas" and kernel_registry.has(self.dist.name):
+            from repro.kernels.dispatch import packed_batch
+
+            def evaluate(xs, ys, lx, ly, eps_rows, shard_ids):
+                out = packed_batch(self.dist.name, xs, ys, lx, ly,
+                                   eps=eps_rows, interpret=self.interpret,
+                                   shards=shard_ids)
+                return (np.asarray(out.dist, np.float32),
+                        int(np.asarray(out.pruned).sum()))
+
+            self._round_eval = (evaluate, True)
+        else:
+            from repro.core.counter import _resolve_backend
+            batch = _resolve_backend(self.dist, self.backend)
+
+            def evaluate(xs, ys, lx, ly, eps_rows, shard_ids):
+                return np.asarray(batch(xs, ys, lx, ly), np.float32), 0
+
+            self._round_eval = (evaluate, False)
+        return self._round_eval
+
+    def _round_query(self, rows: List[np.ndarray], eps: float,
+                     dead_ix: Tuple[int, ...]) -> List[List[int]]:
+        """Shared-frontier rounds across all alive shards (one evaluator
+        call per merged round); evaluation totals land in
+        :attr:`device_stats`, never the shards' host counters."""
+        from repro.core.batch_engine import FleetBatchEngine, ShardPlans
+        from repro.kernels.dispatch import pad_ragged_rows
+        qpad, q_lens = pad_ragged_rows(rows)
+        groups = []
+        for si, w in enumerate(self.workers):
+            s = self.shards.get(w)
+            if si in dead_ix or s is None:
+                continue
+            groups.append(ShardPlans(
+                shard=si, data=s.net.data,
+                plans=[s.net.range_query_plan(eps) for _ in rows],
+                queries=qpad, q_lens=q_lens))
+        evaluate, fused = self._round_evaluator()
+        engine = FleetBatchEngine(evaluate, fused=fused)
+        per_group = engine.run(groups, eps)
+        hits: List[set] = [set() for _ in rows]
+        for grp, res in zip(groups, per_group):
+            gids = self.shards[self.workers[grp.shard]].gids
+            for qi, local in enumerate(res):
+                hits[qi].update(int(gids[x]) for x in local)
+        agg = self.device_stats
+        agg["pivot_evals"] += engine.exact_evals
+        agg["member_evals"] += engine.verdict_evals
+        agg["fused_pruned"] += engine.fused_pruned
+        agg["total_evals"] += engine.exact_evals + engine.verdict_evals
+        agg["rounds"] += engine.rounds
+        agg["device_queries"] += 1
+        return [sorted(h) for h in hits]
+
+    # -- one-shot stacked serving (legacy fallback) -------------------------
+
+    def _oneshot_query(self, rows: List[np.ndarray], eps: float,
+                       dead_ix: Tuple[int, ...],
+                       capacity: Optional[int]) -> List[List[int]]:
+        """ONE stacked device query through ``merge_flats`` +
+        ``fleet_range_query`` — a single dispatch, but only flat-net
+        pivot/ring bounds prune (no frontier rounds)."""
+        from repro.core.distributed import fleet_range_query, merge_flats
         flats = [self.shards[w].flat if self.shards.get(w) is not None
                  else None for w in self.workers]
-        dead_ix = tuple(i for i, w in enumerate(self.workers)
-                        if w in dead or flats[i] is None)
         # the merged fleet arrays only change on resize, so reuse them
         # across queries instead of re-stacking the whole fleet per call
         if self._merged is not None and self._merged[0] == dead_ix:
@@ -319,8 +450,6 @@ class ElasticIndex:
             merged = merge_flats(alive) if len(alive) > 1 else None
             self._merged = (dead_ix, merged)
         hits: List[set] = [set() for _ in rows]
-        if not rows:
-            return []
         from repro.kernels.dispatch import pad_ragged_rows
         qb, q_lens = pad_ragged_rows(rows)
         res, stats = fleet_range_query(

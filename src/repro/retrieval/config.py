@@ -27,6 +27,10 @@ kernel_backend device-kernel substrate override, orthogonal to
                dispatcher with fused ε-pruning
 lb_cascade     screen verdict frontiers with registered lower bounds
 workers        fleet worker names (or an int count); fleet execution only
+fleet_mode     fleet serving mode: ``rounds`` (default — shared-frontier
+               round-based serving through the packed fused-ε dispatcher,
+               eval counts match the host loop) or ``oneshot`` (legacy
+               single stacked device query); fleet execution only
 eps_prime,     index tuning knobs (reference-net radii / parent cap /
 num_max,       exact-vs-Lemma-4 bounds / MV reference count)
 tight_bounds,
@@ -65,6 +69,7 @@ class RetrievalConfig:
     kernel_backend: Optional[str] = None
     lb_cascade: bool = False
     workers: Optional[Tuple[str, ...]] = None
+    fleet_mode: str = "rounds"
     eps_prime: float = 1.0
     num_max: Optional[int] = None
     tight_bounds: bool = False
@@ -130,10 +135,20 @@ class RetrievalConfig:
                 raise ValueError(
                     "lb_cascade applies to the host/batched frontier "
                     "engine, not the stacked fleet path")
-        elif self.workers is not None:
-            raise ValueError(
-                f"workers only apply to fleet execution "
-                f"(execution={self.execution!r})")
+            from repro.launch.elastic import FLEET_MODES
+            if self.fleet_mode not in FLEET_MODES:
+                raise ValueError(
+                    f"fleet_mode must be one of {FLEET_MODES}; "
+                    f"got {self.fleet_mode!r}")
+        else:
+            if self.workers is not None:
+                raise ValueError(
+                    f"workers only apply to fleet execution "
+                    f"(execution={self.execution!r})")
+            if self.fleet_mode != "rounds":
+                raise ValueError(
+                    f"fleet_mode only applies to fleet execution "
+                    f"(execution={self.execution!r})")
 
     # -- resolution helpers --------------------------------------------------
 

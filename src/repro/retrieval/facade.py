@@ -20,8 +20,11 @@ the config:
 * ``lam=None``, execution ``host|batched`` — window-level retrieval over
   the database rows through the registry's index kinds on the PR-1
   frontier-plan substrate, hits are window ids;
-* execution ``fleet`` — the PR-3 elastic sharded serving layer
-  (``launch/elastic.py``), hits are global window ids and
+* execution ``fleet`` — the elastic sharded serving layer
+  (``launch/elastic.py``): round-based shared-frontier serving by default
+  (``fleet_mode="rounds"``, one packed fused-ε dispatch per merged round),
+  the legacy one-shot stacked device query via ``fleet_mode="oneshot"`` or
+  ``.via("fleet-oneshot")``.  Hits are global window ids and
   :meth:`Retriever.elastic` exposes resize / dead-worker controls.
 
 Every call returns a uniform :class:`ResultSet`: hits plus the
@@ -85,7 +88,9 @@ class QueryPlan:
 
     * :meth:`via` — override the execution policy for this call only
       (``host`` vs ``batched``; on a fleet retriever ``host`` is the
-      per-shard parity loop, ``batched`` the stacked device query);
+      per-shard parity loop, ``batched`` the config's fleet mode, and
+      ``fleet-rounds`` / ``fleet-oneshot`` pin the shared-frontier
+      round-based path or the legacy one-shot stacked device query);
     * :meth:`lb` — override the config's LB-cascade toggle for this call
       (hit sets are unchanged by construction; only exact-eval counts
       drop);
@@ -111,9 +116,13 @@ class QueryPlan:
         return QueryPlan(self._r, self._queries, self._is_batch, **args)
 
     def via(self, execution: str) -> "QueryPlan":
-        if execution not in ("host", "batched"):
+        allowed = ("host", "batched")
+        if self._r.is_fleet:
+            allowed += ("fleet-rounds", "fleet-oneshot")
+        if execution not in allowed:
             raise ValueError(
-                f"via() accepts 'host' or 'batched'; got {execution!r}")
+                f"via() accepts {allowed} on this retriever; "
+                f"got {execution!r}")
         return self._clone(execution=execution)
 
     def lb(self, enabled: bool = True) -> "QueryPlan":
@@ -303,7 +312,8 @@ class _FleetEngine:
         self.fleet = ElasticIndex(
             cfg.dist, data, list(cfg.workers), eps_prime=cfg.eps_prime,
             tight_bounds=cfg.tight_bounds, backend=cfg.effective_backend,
-            max_cohort=cfg.max_cohort, interpret=cfg.interpret)
+            max_cohort=cfg.max_cohort, interpret=cfg.interpret,
+            fleet_mode=cfg.fleet_mode)
         self.dead: set = set()
 
     def range_many(self, queries, eps, execution, extra_dead=()
@@ -312,7 +322,12 @@ class _FleetEngine:
         if execution == "host":
             return [self.fleet.range_query(q, eps, dead=dead, batched=False)
                     for q in queries]
-        return self.fleet.range_query_batch(queries, eps, dead=dead)
+        # "batched" follows the config's fleet_mode; the via() modifiers
+        # pin a specific serving path for this call only
+        mode = {"fleet-rounds": "rounds",
+                "fleet-oneshot": "oneshot"}.get(execution)
+        return self.fleet.range_query_batch(queries, eps, dead=dead,
+                                            mode=mode)
 
 
 # -- the facade ---------------------------------------------------------------

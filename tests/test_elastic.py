@@ -1,7 +1,9 @@
-"""Elastic fleet serving on the batched substrate: stacked-device vs
-host-loop hit parity across the metric distances, incremental resize
-parity vs full rebuild under worker add/remove/kill, and the
-``{query, build}`` accounting buckets across ``__init__``/``resize``."""
+"""Elastic fleet serving on the batched substrate: round-based
+(shared-frontier) and one-shot stacked serving vs host-loop hit parity
+across the metric distances, the round path's eval-count parity property,
+incremental resize parity vs full rebuild under worker add/remove/kill,
+and the ``{query, build}`` accounting buckets across
+``__init__``/``resize``."""
 
 import numpy as np
 import pytest
@@ -27,19 +29,57 @@ def _fleet(dist_name, gen, eps_prime, n=120, workers=("a", "b", "c"),
 
 
 @pytest.mark.parametrize("dist_name,gen,eps_prime,eps", CASES)
-def test_stacked_serving_matches_host_loop(dist_name, gen, eps_prime, eps):
-    """Acceptance: range_query(batched=True) routes one stacked device
-    query through merge_flats and returns hit sets identical to the host
-    per-shard pointer-chasing loop."""
+def test_batched_serving_matches_host_loop(dist_name, gen, eps_prime, eps):
+    """Acceptance: both batched serving modes — round-based shared
+    frontier (the default) and the legacy one-shot stacked device query —
+    return hit sets identical to the host per-shard pointer-chasing
+    loop."""
     data, fleet = _fleet(dist_name, gen, eps_prime)
     qs = data[[3, 40, 77]]
     want = [fleet.range_query(q, eps, batched=False) for q in qs]
-    assert fleet.range_query_batch(qs, eps) == want
-    # the single-query wrapper takes the same path
+    assert fleet.range_query_batch(qs, eps, mode="rounds") == want
+    assert fleet.range_query_batch(qs, eps, mode="oneshot") == want
+    # the single-query wrapper takes the default (rounds) path
     assert fleet.range_query(qs[0], eps) == want[0]
-    # the stacked run is device work, not host-counter work
+    # batched runs are device work, not host-counter work
     assert fleet.device_stats["device_queries"] > 0
     assert fleet.device_stats["total_evals"] > 0
+    assert fleet.device_stats["rounds"] > 0
+
+
+@pytest.mark.parametrize("dist_name,gen,eps_prime,eps", CASES)
+def test_round_serving_eval_parity_with_host_loop(dist_name, gen,
+                                                  eps_prime, eps):
+    """The round-based path's consistency property: it drives the SAME
+    Alg.-3 frontier plans as the host per-shard loop, so hit sets AND
+    exact-evaluation counts are identical — the device path merely merges
+    who evaluates a round.  Holds under dead-worker masking and after a
+    resize; the build bucket is untouched by serving on either path."""
+    data, fleet = _fleet(dist_name, gen, eps_prime)
+    # ragged query lengths ride the packed dispatch; equal-length-only
+    # distances (euclidean) keep the full window width
+    widths = (None, None, None) if dist_name == "euclidean" \
+        else (None, -1, -2)
+    qs = [data[i][:w] for i, w in zip((3, 40, 77), widths)]
+
+    def check(dead=()):
+        build0 = fleet.eval_count()["build"]
+        host0 = fleet.eval_count()["query"]
+        want = [fleet.range_query(q, eps, dead=dead, batched=False)
+                for q in qs]
+        host_evals = fleet.eval_count()["query"] - host0
+        dev0 = fleet.device_stats["total_evals"]
+        got = fleet.range_query_batch(qs, eps, dead=dead, mode="rounds")
+        dev_evals = fleet.device_stats["total_evals"] - dev0
+        assert got == want
+        assert dev_evals == host_evals
+        assert fleet.eval_count()["query"] == host0 + host_evals
+        assert fleet.eval_count()["build"] == build0
+
+    check()
+    check(dead=("b",))
+    fleet.resize(["a", "c", "d"])
+    check()
 
 
 @pytest.mark.parametrize("dist_name,gen,eps_prime,eps", CASES[:2])

@@ -1,0 +1,89 @@
+"""Docs gate: markdown link check + README quickstart smoke (stdlib only).
+
+Run from anywhere::
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two checks, both CI-blocking (`.github/workflows/ci.yml`, docs job):
+
+1. **Link check** — every relative markdown link target in the checked
+   documents must exist on disk.  External (``http(s)``/``mailto``)
+   links, pure in-page anchors (``#...``), and targets that escape the
+   repo root (the CI badge's ``../../actions/...``) are skipped; a
+   ``path#anchor`` target is checked for the path part only.
+2. **Quickstart smoke** — the FIRST fenced ``python`` block of README.md
+   is the facade quickstart and must stay self-contained: it is executed
+   here, so the documented entry point can't silently rot.  Later blocks
+   are illustrative sketches and are not run.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+#: the documents under the link gate (repo-relative)
+DOCS = (
+    "README.md",
+    "docs/architecture.md",
+    "benchmarks/README.md",
+)
+
+#: inline markdown links: [text](target) — images included via the [!...
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_links(doc: pathlib.Path) -> list:
+    errors = []
+    # fenced code blocks routinely contain f(x)[i](j)-shaped false
+    # positives, so strip them before scanning for links
+    text = re.sub(r"```.*?```", "", doc.read_text(), flags=re.DOTALL)
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = (doc.parent / target.split("#", 1)[0]).resolve()
+        try:
+            path.relative_to(REPO)
+        except ValueError:
+            continue                      # escapes the repo (CI badge)
+        if not path.exists():
+            errors.append(f"{doc.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def run_quickstart(readme: pathlib.Path) -> list:
+    blocks = _FENCE.findall(readme.read_text())
+    if not blocks:
+        return [f"{readme.name}: no ```python quickstart block found"]
+    src = blocks[0]
+    try:
+        exec(compile(src, f"{readme.name}:quickstart", "exec"), {})
+    except Exception as e:  # noqa: BLE001 — any failure fails the gate
+        return [f"{readme.name}: quickstart raised {type(e).__name__}: {e}"]
+    return []
+
+
+def main() -> int:
+    errors = []
+    for rel in DOCS:
+        doc = REPO / rel
+        if not doc.exists():
+            errors.append(f"missing document: {rel}")
+            continue
+        errors.extend(check_links(doc))
+    print(f"# link-checked {len(DOCS)} documents")
+    errors.extend(run_quickstart(REPO / "README.md"))
+    if errors:
+        for e in errors:
+            print(f"::error::{e}")
+        return 1
+    print("# docs OK: links resolve, quickstart runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
