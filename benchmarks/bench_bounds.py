@@ -1,0 +1,191 @@
+"""LB envelope-cascade benchmark — the tiered lower-bound gates.
+
+Locks the PR's acceptance criterion as deterministic count metrics
+(compared strict in CI against ``BENCH_bounds.json``):
+
+* ``bounds_dtw_*`` / ``bounds_erp_*`` — linear-scan retrieval on TRAJ,
+  where the cascade IS the pruning mechanism (every candidate is a
+  verdict row).  Per eps the facade runs cascade-off, ``endpoint`` and
+  ``envelope`` tiers; hit sets are asserted identical and the envelope
+  tier's exact wavefront evaluations are gated at <= 0.7x the
+  cascade-off count (the >= 30% drop).
+* ``bounds_erp_refnet_*`` — diagnostic rows on the reference-net index:
+  refnet descent frontiers are mostly EXACT rows (the distance value
+  itself steers the traversal, so they opt out of LB pruning with an
+  infinite fused eps) and the drop there is structurally small.
+  Reported, not gated.
+* ``bounds_packed_dtw`` — the device-fused path
+  (``kernel_backend="pallas"``): the ``lb:dtw`` elementwise envelope
+  spec screens each packed round before the wavefront call, and the
+  dispatcher's per-tier ``lb_rows``/``lb_pruned`` accounting is
+  reported (padding rows excluded by construction).
+* ``bounds_envelope_warm_sweep`` — repeating a shape-stable envelope
+  sweep through the kernel registry compiles nothing (``traces`` 0).
+* ``bounds_roofline_*`` — arithmetic intensity of the elementwise
+  ``lb:dtw`` spec vs the ``dtw`` wavefront spec at the same batch
+  shape (``roofline.hlo_costs.kernel_cost_report``): the envelope
+  screen is the VPU-friendly cheap stage, the DP the expensive one.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mutate_queries, row
+from repro.kernels import dispatch as kernel_dispatch
+from repro.kernels import registry
+from repro.retrieval import RetrievalConfig, Retriever
+from repro.roofline.hlo_costs import kernel_cost_report
+
+#: acceptance gate — envelope-tier exact evals vs cascade-off exact evals
+DROP_GATE = 0.7
+
+
+def _cascade_cell(name, dist_name, data, ranges, nq, out, *, gate):
+    r = Retriever.build(RetrievalConfig(dist_name, index="linear"), data)
+    qs = mutate_queries(data, nq, seed=2)
+    N = len(data)
+    for eps in ranges:
+        r.reset_counter()
+        t0 = time.perf_counter()
+        off = r.batch(qs).via("batched").range(eps)
+        off_dt = (time.perf_counter() - t0) * 1e6 / nq
+        out.append(row(
+            f"{name}_eps{eps}_off", off_dt,
+            evals_frac=round(off.stats["query"] / (nq * N), 4),
+            dispatches=off.stats["dispatches"],
+            rounds=off.stats["rounds"]))
+
+        tier_evals = {}
+        for tier in ("endpoint", "envelope"):
+            r.reset_counter()
+            t0 = time.perf_counter()
+            res = r.batch(qs).via("batched").lb(tier).range(eps)
+            dt = (time.perf_counter() - t0) * 1e6 / nq
+            assert res.hits == off.hits, \
+                f"{name} tier={tier} changed hit set at eps={eps}"
+            assert res.stats["build"] == off.stats["build"], \
+                f"{name} tier={tier} drifted build evals at eps={eps}"
+            tier_evals[tier] = res.stats["query"]
+            out.append(row(
+                f"{name}_eps{eps}_{tier}", dt,
+                evals_frac=round(res.stats["query"] / (nq * N), 4),
+                lb_evals=res.stats["lb"],
+                dispatches=res.stats["dispatches"],
+                exact_drop=round(1 - res.stats["query"]
+                                 / max(off.stats["query"], 1), 3),
+                speedup=round(off_dt / max(dt, 1e-9), 2)))
+
+        if gate:
+            assert tier_evals["envelope"] <= DROP_GATE * off.stats["query"], (
+                f"{name} eps={eps}: envelope tier kept "
+                f"{tier_evals['envelope']}/{off.stats['query']} exact evals "
+                f"(gate: <= {DROP_GATE:.0%})")
+
+
+def _refnet_diagnostic(data, ranges, nq, out):
+    cfg = RetrievalConfig("erp", eps_prime=2.0, bulk_build=False)
+    r = Retriever.build(cfg, data)
+    qs = mutate_queries(data, nq, seed=2)
+    N = len(data)
+    for eps in ranges:
+        r.reset_counter()
+        off = r.batch(qs).via("batched").range(eps)
+        r.reset_counter()
+        t0 = time.perf_counter()
+        env = r.batch(qs).via("batched").lb("envelope").range(eps)
+        dt = (time.perf_counter() - t0) * 1e6 / nq
+        assert env.hits == off.hits, f"refnet envelope mismatch eps={eps}"
+        out.append(row(
+            f"bounds_erp_refnet_eps{eps}", dt,
+            evals_frac=round(env.stats["query"] / (nq * N), 4),
+            lb_evals=env.stats["lb"],
+            exact_drop=round(1 - env.stats["query"]
+                             / max(off.stats["query"], 1), 3)))
+
+
+def run(full: bool = False):
+    from repro.data import synthetic
+    out = []
+    n = 4000 if full else 1200
+    nq = 20 if full else 8
+    traj = synthetic.trajectories(n, seed=0)
+
+    # -- gated cells: linear scan, cascade is the pruning mechanism --------
+    _cascade_cell("bounds_dtw", "dtw", traj, [1.0, 2.0, 4.0], nq, out,
+                  gate=True)
+    _cascade_cell("bounds_erp", "erp", traj, [1.0, 2.0, 4.0], nq, out,
+                  gate=True)
+
+    # -- diagnostic: refnet frontiers are mostly EXACT rows ----------------
+    _refnet_diagnostic(traj, [1.0, 2.0], nq, out)
+
+    # -- device-fused path: envelope screen inside the packed round --------
+    nd = 600 if full else 240
+    nqd = 4
+    ddata = traj[:nd]
+    rp = Retriever.build(
+        RetrievalConfig("dtw", index="linear", kernel_backend="pallas"),
+        ddata)
+    dqs = mutate_queries(ddata, nqd, seed=5)
+    off = rp.batch(dqs).via("batched").range(2.0)
+    kernel_dispatch.STATS.reset()
+    t0 = time.perf_counter()
+    env = rp.batch(dqs).via("batched").lb("envelope").range(2.0)
+    dt = (time.perf_counter() - t0) * 1e6 / nqd
+    assert env.hits == off.hits, "packed envelope cascade changed hit set"
+    lb_rows = kernel_dispatch.STATS.lb_rows.get("envelope", 0)
+    lb_pruned = kernel_dispatch.STATS.lb_pruned.get("envelope", 0)
+    assert lb_rows > 0, "packed path never ran the envelope spec"
+    out.append(row(
+        "bounds_packed_dtw", dt,
+        evals_frac=round(env.stats["query"] / (nqd * nd), 4),
+        lb_rows=lb_rows, lb_pruned=lb_pruned,
+        prune_rate=round(lb_pruned / max(lb_rows, 1), 3)))
+
+    # -- trace discipline: shape-stable envelope sweeps compile nothing ----
+    shapes = [("dtw", (16, 12, 2)), ("erp", (16, 12, 2)),
+              ("frechet", (16, 12, 2))]
+
+    def run_sweep():
+        rs = np.random.default_rng(0)
+        for dist_name, (B, L, d) in shapes:
+            xs = rs.normal(size=(B, L, d)).astype(np.float32)
+            ys = rs.normal(size=(B, L, d)).astype(np.float32)
+            spec = registry.get_envelope(dist_name)
+            spec.batch(xs, ys, eps=np.full(B, 1.0, np.float32),
+                       interpret=True)
+
+    run_sweep()                       # warm the cache
+    before = registry.STATS["traces"]
+    t0 = time.perf_counter()
+    run_sweep()
+    sweep_dt = (time.perf_counter() - t0) * 1e6 / len(shapes)
+    retraces = registry.STATS["traces"] - before
+    assert retraces == 0, f"envelope warm sweep retraced {retraces} kernels"
+    out.append(row("bounds_envelope_warm_sweep", sweep_dt, traces=retraces))
+
+    # -- roofline: elementwise screen vs wavefront DP at one batch shape ---
+    B, L, d = 8, 24, 2
+    rs = np.random.default_rng(0)
+    xs = rs.normal(size=(B, L, d)).astype(np.float32)
+    ys = rs.normal(size=(B, L, d)).astype(np.float32)
+    lens = np.full(B, L, np.int32)
+    epsv = np.full(B, 2.0, np.float32)
+    env_spec = registry.get_envelope("dtw")
+    wav_spec = registry.get("dtw")
+    for label, spec in (("lb_dtw_elementwise", env_spec),
+                        ("dtw_wavefront", wav_spec)):
+        def fn(xs, ys, lx, ly, eps, _spec=spec):
+            return _spec.device_call(xs, ys, lx, ly, eps, interpret=True)
+        t0 = time.perf_counter()
+        rep = kernel_cost_report(fn, xs, ys, lens, lens, epsv)
+        dt = (time.perf_counter() - t0) * 1e6
+        out.append(row(
+            f"bounds_roofline_{label}", dt,
+            flops=rep["flops"], bytes=rep["bytes"],
+            arithmetic_intensity=round(rep["arithmetic_intensity"], 4),
+            n_while=rep["n_while"]))
+    return out

@@ -25,6 +25,7 @@ MODULES = [
     ("device", "benchmarks.bench_device"),         # TPU-adapted mode
     ("elastic", "benchmarks.bench_elastic"),       # fleet serving + resize
     ("kernels", "benchmarks.bench_kernels"),       # kernel registry + packing
+    ("bounds", "benchmarks.bench_bounds"),         # tiered LB cascade
 ]
 
 

@@ -67,6 +67,7 @@ from typing import Dict, Generator, List, Optional, Sequence
 import numpy as np
 
 from repro.core.counter import BUILD, QUERY, CountedDistance
+from repro.distances import bounds
 
 EXACT = "exact"
 VERDICT = "verdict"
@@ -89,40 +90,30 @@ class Frontier:
 
 def drive(plan: Plan, counter: CountedDistance, q: np.ndarray,
           q_len: Optional[int] = None, *, eps: Optional[float] = None,
-          lb_cascade: bool = False):
-    """Sequential host-mode driver: one backend dispatch per frontier."""
+          lb_cascade=False):
+    """Sequential host-mode driver: one backend dispatch per frontier.
+
+    ``lb_cascade`` is a tier (``"off" | "endpoint" | "envelope"``; legacy
+    booleans map to off/endpoint).  With a tier active, VERDICT frontiers
+    route through the counter's staged cascade — pruned candidates answer
+    with their (verdict-preserving) lower bound and skip the exact DP.
+    """
+    tier = bounds.normalize_tier(lb_cascade)
     q = np.asarray(q)
     qlen = len(q) if q_len is None else int(q_len)
     try:
         fr = next(plan)
         while True:
             idxs = fr.idxs
-            if lb_cascade and eps is not None and fr.kind == VERDICT:
+            if tier != "off" and eps is not None and fr.kind == VERDICT:
                 qs = np.repeat(q[None, :qlen], idxs.size, 0)
-                ds = _cascade(counter, qs, idxs, qlen, eps)
+                ds = counter.eval_stacked(qs, idxs, qlen, bucket=fr.bucket,
+                                          eps=eps, lb_tier=tier)
             else:
                 ds = counter.eval(q, idxs, qlen, bucket=fr.bucket)
             fr = plan.send(ds)
     except StopIteration as stop:
         return stop.value if stop.value is not None else []
-
-
-def _cascade(counter: CountedDistance, qs: np.ndarray, idxs: np.ndarray,
-             q_len: int, eps: float) -> np.ndarray:
-    """LB-filter verdict rows, exact-evaluate only the survivors.
-
-    Returns per-row values whose ``<= eps`` verdict equals the exact one:
-    survivors get their exact distance, pruned rows their lower bound
-    (``lb <= delta`` and ``lb > eps`` together imply ``delta > eps``).
-    """
-    lbs = counter.lower_bounds(qs, idxs, q_len)
-    if lbs is None:
-        return counter.eval_stacked(qs, idxs, q_len)
-    out = lbs.astype(np.float32, copy=True)
-    keep = lbs <= eps
-    if keep.any():
-        out[keep] = counter.eval_stacked(qs[keep], idxs[keep], q_len)
-    return out
 
 
 class BatchEngine:
@@ -136,9 +127,11 @@ class BatchEngine:
     historical per-bucket engine (same counts, same dispatch sequence).
     """
 
-    def __init__(self, counter: CountedDistance, *, lb_cascade: bool = False):
+    def __init__(self, counter: CountedDistance, *, lb_cascade=False):
         self.counter = counter
-        self.lb_cascade = lb_cascade
+        #: cascade tier ("off" | "endpoint" | "envelope"); legacy booleans
+        #: normalize to off/endpoint
+        self.lb_cascade = bounds.normalize_tier(lb_cascade)
         self.rounds = 0  # merged frontier rounds (diagnostics / benchmarks)
 
     def run(self, plans: Sequence[Plan], queries, eps: float,
@@ -213,28 +206,32 @@ class BatchEngine:
             bucket = BUILD if all(state[i].bucket == BUILD for i in order) \
                 else QUERY
 
-            ds = np.zeros(cand.size, np.float32)
-            exact = np.ones(cand.size, bool)
-            if self.lb_cascade and verdict.any():
-                lbs = self.counter.lower_bounds(
-                    qrows(rows[verdict]), cand[verdict],
-                    row_lens(rows[verdict]))
-                if lbs is not None:
-                    pruned = lbs > eps
-                    ds[np.flatnonzero(verdict)[pruned]] = lbs[pruned]
-                    exact[np.flatnonzero(verdict)[pruned]] = False
-            if exact.any():
+            tier = bounds.normalize_tier(self.lb_cascade)
+            if tier != "off" and verdict.any():
+                # staged cascade INSIDE the round: per-row ε carries the
+                # query ε on verdict rows and +inf on value-consuming EXACT
+                # rows (they opt out of every bound and of fused masking);
+                # the counter runs tier-0 / envelope bounds and compacts
+                # only the survivors into the single exact dispatch.
+                feps = np.where(verdict, np.float32(eps),
+                                np.float32(np.inf))
+                ds = self.counter.eval_stacked(
+                    qrows(rows), cand, row_lens(rows),
+                    bucket=bucket, eps=feps, lb_tier=tier)
+            elif cand.size:
                 # the ONE exact dispatch of this round — every plan, every
                 # length bucket.  On a fused backend, verdict-only rows
                 # carry the query ε (their values come back verdict-masked),
                 # value-consuming EXACT rows opt out via +inf.
                 feps = None
                 if self.counter.fused:
-                    feps = np.where(verdict[exact], np.float32(eps),
+                    feps = np.where(verdict, np.float32(eps),
                                     np.float32(np.inf))
-                ds[exact] = self.counter.eval_stacked(
-                    qrows(rows[exact]), cand[exact], row_lens(rows[exact]),
+                ds = self.counter.eval_stacked(
+                    qrows(rows), cand, row_lens(rows),
                     bucket=bucket, eps=feps)
+            else:
+                ds = np.zeros(0, np.float32)
             self.rounds += 1
 
             new_state = {}
@@ -291,15 +288,22 @@ class FleetBatchEngine:
     total evaluations match the host per-shard loop row for row.
     """
 
-    def __init__(self, evaluate, *, fused: bool = False):
+    def __init__(self, evaluate, *, fused: bool = False, lb=None):
         #: ``evaluate(xs, ys, lx, ly, eps_rows, shard_ids) -> (dists,
         #: n_pruned)`` — one backend call per merged round
         self.evaluate = evaluate
         self.fused = fused
+        #: optional envelope-cascade hook ``lb(shard, idxs, q, q_len) ->
+        #: (m,) bounds`` over a shard's PRECOMPUTED per-window envelopes
+        #: (``FlatNet.envelopes``).  VERDICT rows with ``lb > eps`` answer
+        #: with the bound and never enter the merged evaluate call.
+        self.lb = lb
         self.rounds = 0
         self.exact_evals = 0
         self.verdict_evals = 0
         self.fused_pruned = 0
+        self.lb_rows = 0
+        self.lb_pruned = 0
         self.shard_rows: Dict[int, int] = {}
 
     def run(self, groups: Sequence[ShardPlans], eps: float
@@ -323,18 +327,34 @@ class FleetBatchEngine:
             sizes = [state[k].idxs.size for k in order]
             xs_parts, ys_parts, lx_parts, ly_parts = [], [], [], []
             shard_parts, verdict_parts = [], []
+            part_keep, part_lb = [], []  # per-part cascade masks / bounds
             for k, m in zip(order, sizes):
                 g, i = k
                 grp = groups[g]
                 fr = state[k]
-                xs_parts.append(np.repeat(grp.queries[i][None], m, 0))
-                ys_parts.append(grp.data[fr.idxs])
-                lx_parts.append(np.full(m, int(grp.q_lens[i]), np.int64))
-                ly_parts.append(np.full(m, grp.data.shape[1], np.int64))
-                shard_parts.append(np.full(m, grp.shard, np.int64))
-                verdict_parts.append(np.full(m, fr.kind == VERDICT))
+                keep = np.ones(m, bool)
+                lbv = None
+                if self.lb is not None and fr.kind == VERDICT and m:
+                    # envelope tier over the shard's precomputed per-window
+                    # envelopes: pruned rows answer with the bound below
+                    # and never enter the merged evaluate call
+                    lbv = np.asarray(
+                        self.lb(grp.shard, fr.idxs, grp.queries[i],
+                                int(grp.q_lens[i])), np.float32)
+                    keep = lbv <= eps
+                    self.lb_rows += m
+                    self.lb_pruned += int(m - keep.sum())
+                part_keep.append(keep)
+                part_lb.append(lbv)
+                mk = int(keep.sum())
+                xs_parts.append(np.repeat(grp.queries[i][None], mk, 0))
+                ys_parts.append(grp.data[fr.idxs[keep]])
+                lx_parts.append(np.full(mk, int(grp.q_lens[i]), np.int64))
+                ly_parts.append(np.full(mk, grp.data.shape[1], np.int64))
+                shard_parts.append(np.full(mk, grp.shard, np.int64))
+                verdict_parts.append(np.full(mk, fr.kind == VERDICT))
                 self.shard_rows[grp.shard] = \
-                    self.shard_rows.get(grp.shard, 0) + m
+                    self.shard_rows.get(grp.shard, 0) + mk
             xs = np.concatenate(xs_parts)
             ys = np.concatenate(ys_parts)
             lx = np.concatenate(lx_parts)
@@ -342,12 +362,16 @@ class FleetBatchEngine:
             shard_ids = np.concatenate(shard_parts)
             verdict = np.concatenate(verdict_parts)
 
-            eps_rows = None
-            if self.fused:
-                eps_rows = np.where(verdict, np.float32(eps),
-                                    np.float32(np.inf))
-            ds, n_pruned = self.evaluate(xs, ys, lx, ly, eps_rows, shard_ids)
-            ds = np.asarray(ds, np.float32)
+            if len(xs):
+                eps_rows = None
+                if self.fused:
+                    eps_rows = np.where(verdict, np.float32(eps),
+                                        np.float32(np.inf))
+                ds, n_pruned = self.evaluate(xs, ys, lx, ly, eps_rows,
+                                             shard_ids)
+                ds = np.asarray(ds, np.float32)
+            else:  # every row of the round was envelope-pruned
+                ds, n_pruned = np.zeros(0, np.float32), 0
             self.rounds += 1
             self.exact_evals += int((~verdict).sum())
             self.verdict_evals += int(verdict.sum())
@@ -355,13 +379,18 @@ class FleetBatchEngine:
 
             new_state = {}
             off = 0
-            for k, m in zip(order, sizes):
+            for k, m, keep, lbv in zip(order, sizes, part_keep, part_lb):
                 g, i = k
+                mk = int(keep.sum())
+                out = np.empty(m, np.float32)
+                if lbv is not None:
+                    out[~keep] = lbv[~keep]
+                out[keep] = ds[off:off + mk]
                 try:
-                    new_state[k] = groups[g].plans[i].send(ds[off:off + m])
+                    new_state[k] = groups[g].plans[i].send(out)
                 except StopIteration as stop:
                     results[g][i] = stop.value if stop.value is not None \
                         else []
-                off += m
+                off += mk
             state = new_state
         return results  # type: ignore[return-value]

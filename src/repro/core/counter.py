@@ -38,6 +38,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.distances import base as dist_base
+from repro.distances import bounds
 from repro.distances import np_backend
 
 BACKENDS = ("numpy", "jax", "pallas")
@@ -133,6 +134,13 @@ class CountedDistance:
         self.lb_count = 0    # cheap lower-bound evaluations (LB cascade)
         self.build_count = 0       # exact evaluations spent on construction
         self.build_dispatches = 0  # backend dispatches spent on construction
+        #: per-tier LB accounting: rows a tier was evaluated on / pruned
+        self.lb_tier_rows: dict = {}
+        self.lb_tier_pruned: dict = {}
+        #: lazily-built per-window envelope statistics (boxes + ERP gap
+        #: masses) over ``data`` — cached for the plan's lifetime so the
+        #: cascade never recomputes O(B*L) row norms per round
+        self._env_cache: Optional[bounds.EnvelopeSet] = None
 
     def reset(self) -> None:
         self.count = 0
@@ -140,6 +148,8 @@ class CountedDistance:
         self.lb_count = 0
         self.build_count = 0
         self.build_dispatches = 0
+        self.lb_tier_rows = {}
+        self.lb_tier_pruned = {}
 
     def extend(self, rows: np.ndarray) -> None:
         """Append windows to the indexed database (accounting untouched).
@@ -152,8 +162,21 @@ class CountedDistance:
         rows = np.asarray(rows)
         if len(rows) == 0:
             return
-        self.data = np.concatenate([self.data, rows.astype(self.data.dtype)])
+        rows = rows.astype(self.data.dtype)
+        self.data = np.concatenate([self.data, rows])
         self.n = len(self.data)
+        if self._env_cache is not None:  # incremental envelope refresh
+            self._env_cache.extend(bounds.build_envelopes(rows))
+
+    def envelopes(self) -> bounds.EnvelopeSet:
+        """Per-window envelope statistics over ``data`` (cached).
+
+        Built in ONE stacked vectorized pass on first use; ``extend``
+        refreshes it incrementally, so the cascade's per-candidate gap
+        masses and boxes are gathered (``take``), never recomputed."""
+        if self._env_cache is None:
+            self._env_cache = bounds.build_envelopes(self.data)
+        return self._env_cache
 
     def eval(self, q: np.ndarray, idxs: Sequence[int],
              q_len: Optional[int] = None, *,
@@ -174,7 +197,7 @@ class CountedDistance:
 
     def eval_stacked(self, qs: np.ndarray, idxs: Sequence[int],
                      q_len=None, *, bucket: str = QUERY,
-                     eps=None) -> np.ndarray:
+                     eps=None, lb_tier=None) -> np.ndarray:
         """delta(qs[i], data[idxs[i]]) row-wise in ONE backend dispatch.
 
         ``qs`` holds one (possibly repeated) query row per candidate — the
@@ -187,6 +210,16 @@ class CountedDistance:
         verdict (non-hits come back as a quasi-infinity), and accounting is
         unchanged: each requested row is one exact evaluation, padding rows
         are never counted.
+
+        ``lb_tier`` stages the LB cascade *inside* the round: finite-ε rows
+        run the tier-0 endpoint bounds, ``"envelope"`` additionally runs the
+        elementwise envelope kernel on the survivors, and only the remaining
+        rows are compacted into the (single) exact dispatch — pruned rows
+        come back as their bound value, which preserves every ``<= eps``
+        verdict because ``lb <= delta``.  Accounting: exact rows land in
+        ``count`` (no dispatch is issued when every row was pruned), bound
+        rows in ``lb_count`` plus the per-tier ``lb_tier_rows`` /
+        ``lb_tier_pruned`` maps.
         """
         idxs = np.asarray(idxs, np.int64)
         if idxs.size == 0:
@@ -204,20 +237,108 @@ class CountedDistance:
             bad = int(lx[(lx != L).argmax()])
             raise ValueError(
                 f"{self.dist.name} requires equal lengths ({bad} != {L})")
+        # Rectangular (Lx != Ly) and ragged tiles: all backends take
+        # per-row length vectors.
+        xs = qs[:, :int(lx.max())]
+        ly = np.full(len(ys), L, np.int64)
+
+        tier = bounds.normalize_tier(lb_tier)
+        if tier != "off" and eps is not None:
+            return self._cascade_stacked(xs, ys, idxs, lx, ly, eps, tier,
+                                         bucket)
+
         if bucket == BUILD:
             self.build_count += int(idxs.size)
             self.build_dispatches += 1
         else:
             self.count += int(idxs.size)
             self.dispatches += 1
-        # Rectangular (Lx != Ly) and ragged tiles: all backends take
-        # per-row length vectors.
-        xs = qs[:, :int(lx.max())]
-        ly = np.full(len(ys), L)
         if eps is not None and self.fused:
             return np.asarray(self._batch(xs, ys, lx, ly, eps=eps),
                               np.float32)
         return np.asarray(self._batch(xs, ys, lx, ly), np.float32)
+
+    def _note_lb(self, tier: str, rows: int, pruned: int) -> None:
+        self.lb_count += int(rows)
+        self.lb_tier_rows[tier] = self.lb_tier_rows.get(tier, 0) + int(rows)
+        self.lb_tier_pruned[tier] = \
+            self.lb_tier_pruned.get(tier, 0) + int(pruned)
+
+    def _cascade_stacked(self, xs, ys, idxs, lx, ly, eps, tier: str,
+                         bucket: str) -> np.ndarray:
+        """Tiered LB staging of one round: endpoint -> envelope -> exact.
+
+        Rows with ``eps = +inf`` (value-consuming EXACT frontiers) opt out
+        of every bound and always reach the exact dispatch; all counters see
+        requested rows only (backend batch padding is sliced off below us).
+        """
+        B = idxs.size
+        eps_v = np.broadcast_to(
+            np.asarray(eps, np.float32), (B,)).astype(np.float32)
+        eligible = np.isfinite(eps_v)
+        alive = eligible.copy()
+        lbs = np.zeros(B, np.float32)
+
+        lb_fn = self.dist.lower_bound
+        if lb_fn is not None and eligible.any():
+            r = np.flatnonzero(eligible)
+            kw = {}
+            if self.dist.name == "erp":
+                # satellite: gap masses gathered from the cached envelope
+                # statistics, not recomputed O(B*L) per round
+                kw["y_mass"] = self.envelopes().mass[idxs[r]]
+            lb0 = np.asarray(
+                lb_fn(xs[r], ys[r], lx[r], ly[r], **kw), np.float32)
+            pruned0 = lb0 > eps_v[r]
+            lbs[r] = np.maximum(lbs[r], lb0)
+            alive[r[pruned0]] = False
+            self._note_lb("endpoint", r.size, int(pruned0.sum()))
+
+        if tier == "envelope" and alive.any() and \
+                self.dist.envelope_bound is not None:
+            r = np.flatnonzero(alive)
+            if self.backend == "pallas":
+                from repro.kernels import dispatch as kernel_dispatch
+                from repro.kernels import registry as kernel_registry
+                if kernel_registry.has_envelope(self.dist.name):
+                    out = kernel_dispatch.packed_envelope(
+                        self.dist.name, xs[r], ys[r], lx[r], ly[r],
+                        eps=eps_v[r])
+                    lb1 = np.asarray(out.dist, np.float32)
+                else:  # third-party distance: host envelope fallback
+                    lb1 = self._host_envelope(xs, ys, idxs, lx, ly, r)
+            else:
+                lb1 = self._host_envelope(xs, ys, idxs, lx, ly, r)
+            pruned1 = lb1 > eps_v[r]
+            lbs[r] = np.maximum(lbs[r], lb1)
+            alive[r[pruned1]] = False
+            self._note_lb("envelope", r.size, int(pruned1.sum()))
+
+        out = lbs  # pruned rows answer with their bound (verdict-preserving)
+        exact = ~eligible | alive
+        n_exact = int(exact.sum())
+        if n_exact:
+            if bucket == BUILD:
+                self.build_count += n_exact
+                self.build_dispatches += 1
+            else:
+                self.count += n_exact
+                self.dispatches += 1
+            if self.fused:
+                vals = self._batch(xs[exact], ys[exact], lx[exact],
+                                   ly[exact], eps=eps_v[exact])
+            else:
+                vals = self._batch(xs[exact], ys[exact], lx[exact],
+                                   ly[exact])
+            out[exact] = np.asarray(vals, np.float32)
+        return out
+
+    def _host_envelope(self, xs, ys, idxs, lx, ly, r) -> np.ndarray:
+        """Numpy tier-1 bound on rows ``r`` from cached candidate boxes."""
+        y_env = self.envelopes().take(idxs[r])
+        return np.asarray(
+            self.dist.envelope_bound(xs[r], ys[r], lx[r], ly[r],
+                                     y_env=y_env), np.float32)
 
     def lower_bounds(self, qs: np.ndarray, idxs: Sequence[int],
                      q_len=None) -> Optional[np.ndarray]:
@@ -239,9 +360,15 @@ class CountedDistance:
             lx = np.full(len(ys), int(q_len), np.int64)
         else:
             lx = np.asarray(q_len, np.int64)
-        self.lb_count += int(idxs.size)
+        self._note_lb("endpoint", int(idxs.size), 0)
         ly = np.full(len(ys), ys.shape[1])
-        return np.asarray(lb(qs[:, :int(lx.max())], ys, lx, ly), np.float32)
+        kw = {}
+        if self.dist.name == "erp":
+            # gap masses are cached per candidate id for the plan's
+            # lifetime — not recomputed O(B*L) on every round
+            kw["y_mass"] = self.envelopes().mass[idxs]
+        return np.asarray(
+            lb(qs[:, :int(lx.max())], ys, lx, ly, **kw), np.float32)
 
     def pairwise(self, i: int, idxs: Sequence[int], *,
                  bucket: str = BUILD) -> np.ndarray:

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import _deprecation
 from repro.core.refnet import ReferenceNet
+from repro.distances import bounds
 from repro.distances import np_backend
 from repro.kernels import registry as kernel_registry
 
@@ -60,6 +61,12 @@ class FlatNet:
     n_pivots: int
     dist_name: str
     pivot_ids: Optional[np.ndarray] = None   # (P,) window id of each pivot
+    #: precomputed per-window envelope statistics (boxes + ERP gap masses;
+    #: ``distances/bounds.py``), built in ONE stacked pass at flatten time.
+    #: Fleet rounds and the device query path gather these instead of
+    #: recomputing O(N*L) row reductions per query; None when the distance
+    #: has no envelope bound.
+    envelopes: Optional[bounds.EnvelopeSet] = None
 
     @property
     def eval_width(self) -> int:
@@ -77,7 +84,10 @@ class FlatNet:
         needs a full re-flatten to stay queryable on device.
         """
         if new_data is not None and len(new_data):
-            self.data = np.concatenate([self.data, np.asarray(new_data)])
+            new_data = np.asarray(new_data)
+            self.data = np.concatenate([self.data, new_data])
+            if self.envelopes is not None:  # incremental envelope refresh
+                self.envelopes.extend(bounds.build_envelopes(new_data))
         pivot_rows = np.asarray(pivot_rows, np.int64)
         member_ids = np.asarray(member_ids, np.int64)
         member_dists = np.asarray(member_dists, np.float32)
@@ -110,7 +120,9 @@ class FlatNet:
         hits again, while pivot rows stay behind as routing-only ghosts
         (a pivot is just a stored vector, so it keeps partitioning the
         survivors even after its own window left) and ``pivot_radius``
-        keeps its monotone upper-bound property untouched.
+        keeps its monotone upper-bound property untouched.  ``envelopes``
+        keep their rows too: a departed id never reappears as a candidate,
+        so its (stale) envelope row is simply never gathered again.
         """
         ids = np.asarray(list(member_ids), np.int64)
         if ids.size == 0:
@@ -194,12 +206,17 @@ def flatten_net(net: ReferenceNet, pivot_level: Optional[int] = None
     radius = np.where(valid.any(axis=1),
                       np.where(valid, mdist, 0.0).max(axis=1),
                       0.0).astype(np.float32)
+    # one stacked envelope pass over the whole window database (reused by
+    # fleet rounds and the device query path instead of per-query rebuilds)
+    envs = bounds.build_envelopes(net.data) \
+        if net.dist.envelope_bound is not None else None
     return FlatNet(
         pivots=np.asarray(net.data[pivot_ids]),
         pivot_radius=radius,
         members=mem, member_dist=mdist,
         data=np.asarray(net.data), n_pivots=P, dist_name=net.dist.name,
-        pivot_ids=np.asarray(pivot_ids, np.int64))
+        pivot_ids=np.asarray(pivot_ids, np.int64),
+        envelopes=envs)
 
 
 def _batch_dist(dist_name: str, qs, xs, interpret=True):
@@ -220,8 +237,8 @@ def _batch_dist(dist_name: str, qs, xs, interpret=True):
 
 def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
                        capacity: Optional[int] = None, interpret: bool = True,
-                       q_lens: Optional[np.ndarray] = None
-                       ) -> Tuple[np.ndarray, dict]:
+                       q_lens: Optional[np.ndarray] = None,
+                       lb_cascade="off") -> Tuple[np.ndarray, dict]:
     """Batched exact range query on one shard.
 
     Returns (hits (Q, N) bool, stats).  ``capacity`` is the static budget of
@@ -229,6 +246,14 @@ def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
     (each retry is one recompile — production sets it from telemetry).
     ``q_lens`` gives per-query actual lengths (ragged batches padded to a
     common width — the fleet layer packs every length bucket into one call).
+
+    ``lb_cascade="envelope"`` adds an envelope-bound stage between the ring
+    compaction and the exact kernel call, gathering the PRECOMPUTED
+    per-window envelopes stored on the FlatNet (``flat.envelopes``): rows
+    whose bound already certifies ``> eps`` are compacted away before the
+    wavefront runs, and ``member_evals`` counts only the rows that reached
+    it (``lb_rows`` / ``lb_pruned`` report the stage itself).  Off by
+    default — counts are then bit-identical to the pre-cascade path.
     """
     Q = qs.shape[0]
     N = len(flat.data)
@@ -238,6 +263,17 @@ def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
         q_lens = np.full(Q, qs.shape[1], np.int32)
     mem_valid = flat.members >= 0                     # (P, M)
     mem_safe = np.maximum(flat.members, 0)
+    tier = bounds.normalize_tier(lb_cascade)
+    use_env = tier == "envelope" and flat.envelopes is not None
+    if use_env:
+        env_lo = jnp.asarray(flat.envelopes.lo)
+        env_hi = jnp.asarray(flat.envelopes.hi)
+        env_mass = jnp.asarray(flat.envelopes.mass)
+    else:  # dummies keep operand shapes rank-stable under the static flag
+        d = flat.data.shape[2] if flat.data.ndim == 3 else 1
+        env_lo = jnp.zeros((1, d), jnp.float32)
+        env_hi = jnp.zeros((1, d), jnp.float32)
+        env_mass = jnp.zeros((1,), jnp.float32)
 
     def run(cap: int):
         return _device_query_jit(
@@ -245,18 +281,20 @@ def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
             jnp.asarray(flat.pivots),
             jnp.asarray(flat.pivot_radius), jnp.asarray(mem_safe),
             jnp.asarray(mem_valid), jnp.asarray(flat.member_dist),
-            jnp.asarray(flat.data), float(eps), cap, flat.dist_name,
-            interpret)
+            jnp.asarray(flat.data), env_lo, env_hi, env_mass,
+            float(eps), cap, flat.dist_name, interpret, use_env)
 
     cap = int(capacity)
     while True:
-        hits, n_need, n_evals, n_pruned = run(cap)
+        hits, n_need, n_evals, n_pruned, lb_rows, lb_pruned = run(cap)
         if int(n_need) <= cap:
             break
         cap *= 2
     stats = {"pivot_evals": Q * flat.n_pivots,
              "member_evals": int(n_evals),
              "fused_pruned": int(n_pruned),
+             "lb_rows": int(lb_rows),
+             "lb_pruned": int(lb_pruned),
              "capacity": cap,
              "total_evals": Q * flat.n_pivots + int(n_evals)}
     return np.asarray(hits), stats
@@ -265,9 +303,10 @@ def device_range_query(flat: FlatNet, qs: np.ndarray, eps: float, *,
 from functools import partial
 
 
-@partial(jax.jit, static_argnums=(8, 9, 10, 11))
+@partial(jax.jit, static_argnums=(11, 12, 13, 14, 15))
 def _device_query_jit(qs, q_lens, pivots, pradius, members, mem_valid,
-                      mem_dist, data, eps, capacity, dist_name, interpret):
+                      mem_dist, data, env_lo, env_hi, env_mass,
+                      eps, capacity, dist_name, interpret, use_env):
     Q = qs.shape[0]
     P, M = members.shape
     N = data.shape[0]
@@ -305,11 +344,46 @@ def _device_query_jit(qs, q_lens, pivots, pradius, members, mem_valid,
     q_of = sel // (P * M)
     pm = sel % (P * M)
     w_of = members.reshape(-1)[pm]
+    lb_rows = jnp.zeros((), jnp.int32)
+    lb_pruned = jnp.zeros((), jnp.int32)
+    if use_env:
+        # 4b. envelope stage on the compacted survivors: gather the
+        # PRECOMPUTED per-window boxes/masses (built once at flatten time)
+        # and compact a second time, so only rows the envelope bound cannot
+        # certify as > eps reach the exact wavefront.  One-direction form of
+        # the sound bounds in ``distances/bounds.py::lb_envelope_rows``.
+        xq = qs[q_of]
+        if xq.ndim == 2:
+            xq = xq[..., None]
+        Lq = xq.shape[1]
+        mx = jnp.arange(Lq)[None, :] < q_lens[q_of][:, None]    # (C, L)
+        lo_r = env_lo[w_of][:, None, :]                         # (C, 1, d)
+        hi_r = env_hi[w_of][:, None, :]
+        gap = jnp.maximum(lo_r - xq, 0.0) + jnp.maximum(xq - hi_r, 0.0)
+        bd = jnp.sqrt(jnp.maximum(jnp.sum(gap * gap, -1), 0.0))  # (C, L)
+        if dist_name == "frechet":
+            lb = jnp.max(jnp.where(mx, bd, 0.0), axis=1)
+        elif dist_name == "dtw":
+            lb = jnp.sum(jnp.where(mx, bd, 0.0), axis=1)
+        else:  # erp: element consumption + global gap-mass bound
+            gx = jnp.where(mx, jnp.sqrt(
+                jnp.maximum(jnp.sum(xq * xq, -1), 0.0)), 0.0)
+            cons = jnp.sum(jnp.where(mx, jnp.minimum(gx, bd), 0.0), axis=1)
+            gm = jnp.abs(gx.sum(axis=1) - env_mass[w_of])
+            lb = jnp.maximum(cons, gm)
+        keep = valid_sel & (lb <= eps)
+        lb_rows = jnp.sum(valid_sel)
+        lb_pruned = jnp.sum(valid_sel & ~keep)
+        n_keep = jnp.sum(keep)
+        sel2 = jnp.nonzero(keep, size=capacity, fill_value=0)[0]
+        valid_sel = jnp.arange(capacity) < n_keep
+        q_of, w_of = q_of[sel2], w_of[sel2]
     out = spec.device_call(qs[q_of], data[w_of], lx=q_lens[q_of], eps=eps,
                            interpret=interpret)
     good = valid_sel & out.hit
     hits = hits.at[q_of, w_of].max(good)
-    return hits, n_need, jnp.sum(valid_sel), jnp.sum(valid_sel & out.pruned)
+    return (hits, n_need, jnp.sum(valid_sel),
+            jnp.sum(valid_sel & out.pruned), lb_rows, lb_pruned)
 
 
 def host_reference_hits(flat: FlatNet, qs: np.ndarray, eps: float
@@ -355,6 +429,14 @@ def merge_flats(flats: Sequence[FlatNet]) -> Tuple[FlatNet, List[int]]:
         pivot_ids = np.concatenate(
             [np.asarray(f.pivot_ids, np.int64) + o
              for f, o in zip(flats, offsets)])
+    envs = None
+    if all(f.envelopes is not None for f in flats):
+        e0 = flats[0].envelopes
+        envs = bounds.EnvelopeSet(e0.lo.copy(), e0.hi.copy(),
+                                  e0.mass.copy(), e0.cum.copy(),
+                                  e0.lens.copy())
+        for f in flats[1:]:
+            envs.extend(f.envelopes)
     return FlatNet(
         pivots=np.concatenate([f.pivots for f in flats]),
         pivot_radius=np.concatenate([f.pivot_radius for f in flats]),
@@ -362,7 +444,8 @@ def merge_flats(flats: Sequence[FlatNet]) -> Tuple[FlatNet, List[int]]:
         member_dist=np.concatenate(mdists),
         data=np.concatenate([f.data for f in flats]),
         n_pivots=sum(f.n_pivots for f in flats),
-        dist_name=flats[0].dist_name, pivot_ids=pivot_ids), offsets
+        dist_name=flats[0].dist_name, pivot_ids=pivot_ids,
+        envelopes=envs), offsets
 
 
 def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
@@ -411,6 +494,8 @@ def fleet_range_query(flats: List[FlatNet], qs: np.ndarray, eps: float,
                  "fleet_pivot_evals": s["pivot_evals"],
                  "fleet_member_evals": s["member_evals"],
                  "fleet_fused_pruned": s.get("fused_pruned", 0),
+                 "fleet_lb_rows": s.get("lb_rows", 0),
+                 "fleet_lb_pruned": s.get("lb_pruned", 0),
                  "fleet_total_evals": s["total_evals"]}
         for (i, f), off in zip(alive, offsets):
             results[i] = hits[:, off:off + len(f.data)]

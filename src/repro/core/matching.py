@@ -71,7 +71,7 @@ class LinearScanIndex:
         return self
 
     def range_query(self, q, eps, q_len=None, *,
-                    lb_cascade: bool = False) -> List[int]:
+                    lb_cascade=False) -> List[int]:
         return batch_engine.drive(self.range_query_plan(eps), self.counter,
                                   q, q_len, eps=eps, lb_cascade=lb_cascade)
 
@@ -108,7 +108,7 @@ class SubsequenceMatcher:
                  index: str = "refnet", eps_prime: float = 1.0,
                  num_max: Optional[int] = None, tight_bounds: bool = False,
                  mv_refs: int = 5, backend: str = "numpy",
-                 lb_cascade: bool = False, batched: bool = True,
+                 lb_cascade=False, batched: bool = True,
                  bulk_build: bool = True):
         _deprecation.warn_legacy("SubsequenceMatcher")
         from repro.retrieval import registry as retrieval_registry

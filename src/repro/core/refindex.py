@@ -86,7 +86,7 @@ class MVReferenceIndex:
 
     def range_query(self, q: np.ndarray, eps: float,
                     q_len: Optional[int] = None, *,
-                    lb_cascade: bool = False) -> List[int]:
+                    lb_cascade=False) -> List[int]:
         return batch_engine.drive(self.range_query_plan(eps), self.counter,
                                   q, q_len, eps=eps, lb_cascade=lb_cascade)
 

@@ -402,7 +402,7 @@ class ReferenceNet:
 
     def range_query(self, q: np.ndarray, eps: float,
                     q_len: Optional[int] = None, *,
-                    lb_cascade: bool = False) -> List[int]:
+                    lb_cascade=False) -> List[int]:
         """All object idxs X with delta(q, X) <= eps (host-mode driver)."""
         return batch_engine.drive(self.range_query_plan(eps), self.counter,
                                   q, q_len, eps=eps, lb_cascade=lb_cascade)

@@ -58,6 +58,11 @@ class Distance:
     #: optional vectorized numpy lower bound, row-wise <= batch(...); used by
     #: the batch engine's LB cascade.  None = no cheap bound available.
     lower_bound: Optional[Callable] = None
+    #: optional tier-1 envelope bound (LB_Keogh lineage, O(B*L) elementwise;
+    #: ``distances/bounds.py``): same signature plus a ``y_env`` keyword for
+    #: precomputed per-candidate envelope statistics.  None = the cascade's
+    #: ``"envelope"`` tier falls back to the endpoint tier alone.
+    envelope_bound: Optional[Callable] = None
 
     def pair(self, x, y, len_x=None, len_y=None):
         x = jnp.asarray(x)

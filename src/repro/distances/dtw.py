@@ -44,4 +44,5 @@ dtw = base.register(base.Distance(
     variable_length=True,
     doc="Dynamic Time Warping; element cost = Euclidean",
     lower_bound=bounds.lb_dtw,
+    envelope_bound=bounds.lb_dtw_envelope,
 ))

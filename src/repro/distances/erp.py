@@ -54,4 +54,5 @@ erp = base.register(base.Distance(
     variable_length=True,
     doc="Edit distance with Real Penalty; gap element g = 0; metric",
     lower_bound=bounds.lb_erp,
+    envelope_bound=bounds.lb_erp_envelope,
 ))

@@ -41,4 +41,5 @@ frechet = base.register(base.Distance(
     variable_length=True,
     doc="Discrete Frechet distance (DFD); metric",
     lower_bound=bounds.lb_frechet,
+    envelope_bound=bounds.lb_frechet_envelope,
 ))

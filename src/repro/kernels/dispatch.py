@@ -65,6 +65,12 @@ class DispatchStats:
     pruned: int = 0         # rows certified > eps before their last diagonal
     #: rows per fleet shard across cross-shard (round-based fleet) dispatches
     shard_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: LB-cascade accounting per tier (``endpoint`` / ``envelope``): rows a
+    #: tier's bound was evaluated on, and rows it certified ``> eps``.
+    #: Requested rows only — the registry's pow2 batch padding is sliced
+    #: off before any bound value reaches these counters.
+    lb_rows: Dict[str, int] = dataclasses.field(default_factory=dict)
+    lb_pruned: Dict[str, int] = dataclasses.field(default_factory=dict)
     last_meta: Optional[PackedMeta] = None
 
     def reset(self) -> None:
@@ -73,7 +79,13 @@ class DispatchStats:
         self.rows = 0
         self.pruned = 0
         self.shard_rows = {}
+        self.lb_rows = {}
+        self.lb_pruned = {}
         self.last_meta = None
+
+    def note_lb(self, tier: str, rows: int, pruned: int) -> None:
+        self.lb_rows[tier] = self.lb_rows.get(tier, 0) + int(rows)
+        self.lb_pruned[tier] = self.lb_pruned.get(tier, 0) + int(pruned)
 
 
 STATS = DispatchStats()
@@ -164,3 +176,34 @@ def packed_batch(name: str, xs, ys, lx=None, ly=None, *, eps=None,
     STATS.pruned += int(result.pruned.sum())
     STATS.last_meta = meta
     return result
+
+
+def packed_envelope(name: str, xs, ys, lx=None, ly=None, *, eps,
+                    block_b: int = 8,
+                    interpret: Optional[bool] = None) -> registry.KernelOut:
+    """ONE elementwise envelope-bound call over a round's candidate rows.
+
+    The ``lb:<name>`` KernelSpec is O(B*L) elementwise work (no wavefront),
+    so rows need no bucket sort — per-row lengths mask the ragged tails
+    directly.  Returns the bound in ``.dist`` (never BIG-masked), with
+    ``.pruned`` marking rows whose bound certifies ``dist > eps``.  Tier
+    accounting lands in :data:`STATS` (``lb_rows['envelope']`` /
+    ``lb_pruned['envelope']``); the registry's pow2 batch padding is sliced
+    off inside ``spec.batch`` so padding rows never reach the counters.
+    """
+    spec = registry.get_envelope(name)
+    xs = np.asarray(xs)
+    ys = np.asarray(ys)
+    B = len(xs)
+    if B == 0:
+        z = np.zeros((0,), np.float32)
+        return registry.KernelOut(z, z.astype(bool), z.astype(bool))
+    lx = np.full(B, xs.shape[1], np.int64) if lx is None \
+        else np.asarray(lx, np.int64)
+    ly = np.full(B, ys.shape[1], np.int64) if ly is None \
+        else np.asarray(ly, np.int64)
+    eps_v = np.broadcast_to(np.asarray(eps, np.float32), (B,))
+    out = spec.batch(xs, ys, lx, ly, eps=eps_v,
+                     block_b=block_b, interpret=interpret)
+    STATS.note_lb("envelope", B, int(out.pruned.sum()))
+    return out

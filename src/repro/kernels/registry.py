@@ -10,7 +10,10 @@ registry is that substrate's single entry point:
 
 * one :class:`KernelSpec` per distance, keyed exactly like the PR-4
   distance registry (``dtw`` / ``erp`` / ``frechet`` / ``levenshtein`` —
-  the wavefront modes — plus elementwise ``euclidean`` / ``hamming``);
+  the wavefront modes — plus elementwise ``euclidean`` / ``hamming``, and
+  one ``lb:<name>`` envelope spec per alignment distance with an envelope
+  bound: the LB-cascade tier-1 kernel, pure O(B*L) elementwise work that
+  shares this cache and the zero-retrace gate);
 * one ``interpret`` policy: resolved against the default JAX backend once
   per process (:func:`default_interpret`), not per call;
 * one jit cache: every ``(kernel, Lx, Ly, d, batch, block, interpret)``
@@ -103,7 +106,7 @@ class KernelSpec:
     """Device evaluation of one registered distance."""
 
     name: str                 # distance-registry key
-    kind: str                 # "wavefront" | "elementwise"
+    kind: str                 # "wavefront" | "elementwise" | "envelope"
     mode: Optional[str] = None  # wavefront DP mode (dtw/erp/dfd/lev)
 
     # -- traceable path ------------------------------------------------------
@@ -130,6 +133,8 @@ class KernelSpec:
             else jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (B,))
         if self.kind == "elementwise":
             return self._elementwise(xs, ys, lx, eps_v)
+        if self.kind == "envelope":
+            return self._envelope(xs, ys, lx, ly, eps_v)
         return self._wavefront(xs, ys, lx, ly, eps_v, block_b=block_b,
                                interpret=interpret)
 
@@ -147,6 +152,68 @@ class KernelSpec:
         hit = d <= eps_v
         return KernelOut(jnp.where(hit, d, BIG), hit,
                          jnp.zeros_like(hit))
+
+    def _envelope(self, xs, ys, lx, ly, eps_v) -> KernelOut:
+        """LB-cascade tier-1 envelope bound (O(B*L) elementwise, VPU-shaped).
+
+        The device mirror of ``distances/bounds.py``'s two-sided envelope
+        bounds (soundness proofs live there): per-row axis-aligned boxes
+        over the valid positions, per-position box distances, and the
+        mode-specific combine — sum (dtw), max (dfd), or the ERP element
+        consumption + prefix gap-mass refinement.  ``dist`` carries the
+        bound itself (never BIG-masked — pruned rows return their bound so
+        callers keep the ``<= eps`` verdict); ``pruned`` certifies
+        ``lb > eps``, i.e. the exact wavefront DP can be skipped."""
+        xs = xs.astype(jnp.float32)
+        ys = ys.astype(jnp.float32)
+        if xs.ndim == 2:
+            xs, ys = xs[..., None], ys[..., None]
+        B, Lx, _ = xs.shape
+        Ly = ys.shape[1]
+        mx = jnp.arange(Lx)[None, :] < lx[:, None]
+        my = jnp.arange(Ly)[None, :] < ly[:, None]
+        big = jnp.float32(3.4e38)
+        lo_y = jnp.where(my[..., None], ys, big).min(axis=1)
+        hi_y = jnp.where(my[..., None], ys, -big).max(axis=1)
+        lo_x = jnp.where(mx[..., None], xs, big).min(axis=1)
+        hi_x = jnp.where(mx[..., None], xs, -big).max(axis=1)
+
+        def box_gap(a, lo, hi):
+            g = jnp.maximum(lo[:, None, :] - a, 0.0) \
+                + jnp.maximum(a - hi[:, None, :], 0.0)
+            return jnp.sqrt(jnp.maximum(jnp.sum(g * g, axis=-1), 0.0))
+
+        bdx = box_gap(xs, lo_y, hi_y)          # (B, Lx)
+        bdy = box_gap(ys, lo_x, hi_x)          # (B, Ly)
+        if self.mode == "dfd":
+            lb = jnp.maximum(jnp.max(jnp.where(mx, bdx, 0.0), axis=1),
+                             jnp.max(jnp.where(my, bdy, 0.0), axis=1))
+        elif self.mode == "dtw":
+            lb = jnp.maximum(jnp.sum(bdx * mx, axis=1),
+                             jnp.sum(bdy * my, axis=1))
+        else:  # erp
+            gx = jnp.where(mx, jnp.sqrt(jnp.maximum(
+                jnp.sum(xs * xs, -1), 0.0)), 0.0)
+            gy = jnp.where(my, jnp.sqrt(jnp.maximum(
+                jnp.sum(ys * ys, -1), 0.0)), 0.0)
+            cons = jnp.maximum(
+                jnp.sum(jnp.minimum(gx, bdx) * mx, axis=1),
+                jnp.sum(jnp.minimum(gy, bdy) * my, axis=1))
+            z = jnp.zeros((B, 1), jnp.float32)
+            Gx = jnp.concatenate([z, jnp.cumsum(gx, axis=1)], axis=1)
+            Gy = jnp.concatenate([z, jnp.cumsum(gy, axis=1)], axis=1)
+            r = jnp.arange(B)
+            Tx = Gx[r, lx]
+            Ty = Gy[r, ly]
+            a = Gx[r, lx // 2]
+            b = Tx - a
+            f = jnp.abs(a[:, None] - Gy) \
+                + jnp.abs(b[:, None] - (Ty[:, None] - Gy))
+            valid_m = jnp.arange(Ly + 1)[None, :] <= ly[:, None]
+            lb = jnp.maximum(cons, jnp.min(
+                jnp.where(valid_m, f, jnp.inf), axis=1))
+        hit = lb <= eps_v
+        return KernelOut(lb, hit, ~hit)
 
     def _wavefront(self, xs, ys, lx, ly, eps_v, *, block_b, interpret
                    ) -> KernelOut:
@@ -274,10 +341,25 @@ for _name, _mode in MODE_OF_NAME.items():
     _KERNELS[_name] = KernelSpec(name=_name, kind="wavefront", mode=_mode)
 for _name in ("euclidean", "hamming"):
     _KERNELS[_name] = KernelSpec(name=_name, kind="elementwise")
+# LB-cascade tier-1 envelope kernels: one per alignment distance with a
+# registered envelope bound (levenshtein's length bound is already exact
+# at tier 0, and token boxes are meaningless — no lb:levenshtein).
+for _name in ("dtw", "erp", "frechet"):
+    _KERNELS[f"lb:{_name}"] = KernelSpec(
+        name=f"lb:{_name}", kind="envelope", mode=MODE_OF_NAME[_name])
 
 
 def has(name: str) -> bool:
     return name in _KERNELS
+
+
+def has_envelope(name: str) -> bool:
+    """Whether distance ``name`` has a device tier-1 envelope kernel."""
+    return f"lb:{name}" in _KERNELS
+
+
+def get_envelope(name: str) -> KernelSpec:
+    return get(f"lb:{name}")
 
 
 def get(name: str) -> KernelSpec:

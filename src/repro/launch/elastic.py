@@ -135,14 +135,21 @@ class ElasticIndex:
     def __init__(self, dist, data: np.ndarray, workers: List[str],
                  *, eps_prime: float = 1.0, tight_bounds: bool = True,
                  backend: str = "numpy", max_cohort: int = 256,
-                 interpret: bool = True, fleet_mode: str = "rounds"):
+                 interpret: bool = True, fleet_mode: str = "rounds",
+                 lb_cascade="off"):
         from repro.core import _deprecation
         from repro.distances import base as dist_base
+        from repro.distances import bounds as dist_bounds
         _deprecation.warn_legacy("ElasticIndex")
         if fleet_mode not in FLEET_MODES:
             raise ValueError(
                 f"fleet_mode must be one of {FLEET_MODES}; "
                 f"got {fleet_mode!r}")
+        self.lb_cascade = dist_bounds.normalize_tier(lb_cascade)
+        if self.lb_cascade == "endpoint":
+            raise ValueError(
+                "the fleet path supports lb_cascade='envelope' only (the "
+                "endpoint tier belongs to the host/batched frontier engine)")
         self.dist = dist_base.require_metric(dist)
         self.data = np.asarray(data)
         self.eps_prime = eps_prime
@@ -158,6 +165,7 @@ class ElasticIndex:
         self._round_eval = None  # resolved (evaluate, fused) for mode=rounds
         self.device_stats = {"pivot_evals": 0, "member_evals": 0,
                              "fused_pruned": 0, "total_evals": 0,
+                             "lb_rows": 0, "lb_pruned": 0,
                              "rounds": 0, "device_queries": 0}
         self.shards: Dict[str, Optional[_Shard]] = {
             w: self._build_shard(self.assignment[w]) for w in self.workers}
@@ -413,8 +421,30 @@ class ElasticIndex:
                 shard=si, data=s.net.data,
                 plans=[s.net.range_query_plan(eps) for _ in rows],
                 queries=qpad, q_lens=q_lens))
+        lb_hook = None
+        if self.lb_cascade == "envelope" and groups:
+            # envelope tier over each shard's PRECOMPUTED FlatNet envelopes
+            # (built once at flatten time, refreshed by append) — the hook
+            # gathers stored boxes/masses per candidate id, no per-round
+            # recomputation of O(rows * L) reductions
+            from repro.distances import bounds as dist_bounds
+            envs = {}
+            for si, w in enumerate(self.workers):
+                s = self.shards.get(w)
+                if s is not None and s.flat.envelopes is not None:
+                    envs[si] = s.flat.envelopes
+            if envs:
+                name = self.dist.name
+
+                def lb_hook(shard, idxs, q, q_len):
+                    e = envs[shard].take(idxs)
+                    xs = np.repeat(q[None], len(idxs), 0)
+                    return dist_bounds.lb_envelope_rows(
+                        name, xs, np.full(len(idxs), q_len, np.int64),
+                        e.lo, e.hi, e.mass)
+
         evaluate, fused = self._round_evaluator()
-        engine = FleetBatchEngine(evaluate, fused=fused)
+        engine = FleetBatchEngine(evaluate, fused=fused, lb=lb_hook)
         per_group = engine.run(groups, eps)
         hits: List[set] = [set() for _ in rows]
         for grp, res in zip(groups, per_group):
@@ -425,6 +455,8 @@ class ElasticIndex:
         agg["pivot_evals"] += engine.exact_evals
         agg["member_evals"] += engine.verdict_evals
         agg["fused_pruned"] += engine.fused_pruned
+        agg["lb_rows"] += engine.lb_rows
+        agg["lb_pruned"] += engine.lb_pruned
         agg["total_evals"] += engine.exact_evals + engine.verdict_evals
         agg["rounds"] += engine.rounds
         agg["device_queries"] += 1
@@ -455,6 +487,7 @@ class ElasticIndex:
         res, stats = fleet_range_query(
             flats, qb, eps, dead=dead_ix, stacked=True, merged=merged,
             capacity=capacity, interpret=self.interpret,
+            lb_cascade=self.lb_cascade,
             q_lens=None if (q_lens == qb.shape[1]).all()
             else q_lens.astype(np.int32))
         self._note_stats(stats)
@@ -481,11 +514,15 @@ class ElasticIndex:
                 agg["pivot_evals"] += st["fleet_pivot_evals"]
                 agg["member_evals"] += st["fleet_member_evals"]
                 agg["fused_pruned"] += st.get("fleet_fused_pruned", 0)
+                agg["lb_rows"] += st.get("fleet_lb_rows", 0)
+                agg["lb_pruned"] += st.get("fleet_lb_pruned", 0)
                 agg["total_evals"] += st["fleet_total_evals"]
             else:
                 agg["pivot_evals"] += st["pivot_evals"]
                 agg["member_evals"] += st["member_evals"]
                 agg["fused_pruned"] += st.get("fused_pruned", 0)
+                agg["lb_rows"] += st.get("lb_rows", 0)
+                agg["lb_pruned"] += st.get("lb_pruned", 0)
                 agg["total_evals"] += st["total_evals"]
         agg["device_queries"] += 1
 

@@ -25,7 +25,13 @@ kernel_backend device-kernel substrate override, orthogonal to
                ``None`` follows ``backend``.  ``pallas`` routes every
                dispatch through the kernel registry's packed ragged-bucket
                dispatcher with fused ε-pruning
-lb_cascade     screen verdict frontiers with registered lower bounds
+lb_cascade     tiered LB policy screening verdict frontiers before the
+               exact DP: ``"off" | "endpoint" | "envelope"`` (legacy
+               booleans normalize to off/endpoint).  ``endpoint`` runs the
+               O(B) first/last-element bounds; ``envelope`` additionally
+               runs the O(B*L) elementwise envelope kernel on the
+               survivors.  Fleet execution accepts ``envelope`` only
+               (gathered from precomputed FlatNet envelopes)
 workers        fleet worker names (or an int count); fleet execution only
 fleet_mode     fleet serving mode: ``rounds`` (default — shared-frontier
                round-based serving through the packed fused-ε dispatcher,
@@ -67,7 +73,7 @@ class RetrievalConfig:
     execution: str = "batched"
     backend: str = "numpy"
     kernel_backend: Optional[str] = None
-    lb_cascade: bool = False
+    lb_cascade: Union[bool, str] = False
     workers: Optional[Tuple[str, ...]] = None
     fleet_mode: str = "rounds"
     eps_prime: float = 1.0
@@ -87,6 +93,12 @@ class RetrievalConfig:
                 tuple(f"w{i}" for i in range(self.workers)))
         elif self.workers is not None:
             object.__setattr__(self, "workers", tuple(self.workers))
+        # normalize the tiered LB policy once (legacy booleans included),
+        # so every engine below sees a canonical tier string and the JSON
+        # round-trip serializes the normalized form
+        from repro.distances import bounds as dist_bounds
+        object.__setattr__(self, "lb_cascade",
+                           dist_bounds.normalize_tier(self.lb_cascade))
 
         dist = dist_base.resolve(self.distance)   # raises on unknown names
         spec = registry.resolve_index(self.index)  # raises on unknown kinds
@@ -131,10 +143,12 @@ class RetrievalConfig:
                 raise ValueError(
                     "fleet execution shards per-worker reference nets; "
                     f"index must be 'refnet', got {self.index!r}")
-            if self.lb_cascade:
+            if self.lb_cascade == "endpoint":
                 raise ValueError(
-                    "lb_cascade applies to the host/batched frontier "
-                    "engine, not the stacked fleet path")
+                    "fleet execution supports lb_cascade='envelope' only "
+                    "(gathered from precomputed FlatNet envelopes); the "
+                    "endpoint tier belongs to the host/batched frontier "
+                    "engine")
             from repro.launch.elastic import FLEET_MODES
             if self.fleet_mode not in FLEET_MODES:
                 raise ValueError(

@@ -91,9 +91,9 @@ class QueryPlan:
       per-shard parity loop, ``batched`` the config's fleet mode, and
       ``fleet-rounds`` / ``fleet-oneshot`` pin the shared-frontier
       round-based path or the legacy one-shot stacked device query);
-    * :meth:`lb` — override the config's LB-cascade toggle for this call
-      (hit sets are unchanged by construction; only exact-eval counts
-      drop);
+    * :meth:`lb` — override the config's LB-cascade tier for this call
+      (``"off" | "endpoint" | "envelope"``, legacy booleans accepted; hit
+      sets are unchanged by construction — only exact-eval counts drop);
     * :meth:`dead` — mask fleet workers out of this call (fault-tolerance
       path; results degrade to the union of the survivors).
     """
@@ -125,10 +125,14 @@ class QueryPlan:
                 f"got {execution!r}")
         return self._clone(execution=execution)
 
-    def lb(self, enabled: bool = True) -> "QueryPlan":
-        if self._r.is_fleet:
-            raise ValueError("lb() does not apply to the stacked fleet path")
-        return self._clone(lb_cascade=enabled)
+    def lb(self, tier=True) -> "QueryPlan":
+        from repro.distances import bounds as dist_bounds
+        tier = dist_bounds.normalize_tier(tier)
+        if self._r.is_fleet and tier == "endpoint":
+            raise ValueError(
+                "the fleet path supports lb('envelope') (or 'off') only; "
+                "the endpoint tier belongs to the host/batched engine")
+        return self._clone(lb_cascade=tier)
 
     def dead(self, *workers: str) -> "QueryPlan":
         if not self._r.is_fleet:
@@ -219,8 +223,10 @@ class _MatcherEngine:
         if execution is not None:
             m.batched = execution == "batched"
         if lb is not None:
-            m.lb_cascade = lb
-            m.engine.lb_cascade = lb
+            from repro.distances import bounds as dist_bounds
+            tier = dist_bounds.normalize_tier(lb)
+            m.lb_cascade = tier
+            m.engine.lb_cascade = tier
         try:
             yield
         finally:
@@ -313,21 +319,28 @@ class _FleetEngine:
             cfg.dist, data, list(cfg.workers), eps_prime=cfg.eps_prime,
             tight_bounds=cfg.tight_bounds, backend=cfg.effective_backend,
             max_cohort=cfg.max_cohort, interpret=cfg.interpret,
-            fleet_mode=cfg.fleet_mode)
+            fleet_mode=cfg.fleet_mode, lb_cascade=cfg.lb_cascade)
         self.dead: set = set()
 
-    def range_many(self, queries, eps, execution, extra_dead=()
-                   ) -> List[List[int]]:
+    def range_many(self, queries, eps, execution, extra_dead=(),
+                   lb=None) -> List[List[int]]:
         dead = tuple(sorted(self.dead | set(extra_dead)))
-        if execution == "host":
-            return [self.fleet.range_query(q, eps, dead=dead, batched=False)
-                    for q in queries]
-        # "batched" follows the config's fleet_mode; the via() modifiers
-        # pin a specific serving path for this call only
-        mode = {"fleet-rounds": "rounds",
-                "fleet-oneshot": "oneshot"}.get(execution)
-        return self.fleet.range_query_batch(queries, eps, dead=dead,
-                                            mode=mode)
+        prev = self.fleet.lb_cascade
+        if lb is not None:   # per-call tier override (envelope/off only;
+            self.fleet.lb_cascade = lb   # QueryPlan.lb validates)
+        try:
+            if execution == "host":
+                return [self.fleet.range_query(q, eps, dead=dead,
+                                               batched=False)
+                        for q in queries]
+            # "batched" follows the config's fleet_mode; the via()
+            # modifiers pin a specific serving path for this call only
+            mode = {"fleet-rounds": "rounds",
+                    "fleet-oneshot": "oneshot"}.get(execution)
+            return self.fleet.range_query_batch(queries, eps, dead=dead,
+                                                mode=mode)
+        finally:
+            self.fleet.lb_cascade = prev
 
 
 # -- the facade ---------------------------------------------------------------
@@ -475,7 +488,8 @@ class Retriever:
                 rounds = self._engine.rounds - r0
         else:
             per_q = self._engine.range_many(plan._queries, eps, execution,
-                                            extra_dead=plan._dead)
+                                            extra_dead=plan._dead,
+                                            lb=plan._lb)
         hits = per_q if plan._is_batch else per_q[0]
         return self._finish(hits, before, rounds=rounds)
 

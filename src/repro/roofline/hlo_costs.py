@@ -13,6 +13,12 @@ by their trip counts, fusions/calls by 1), and accumulates
 
 Elementwise FLOPs/bytes are not counted (dots dominate every assigned
 architecture); the §Roofline notes carry this caveat.
+
+:func:`kernel_cost_report` complements the text parser with the compiler's
+own ``cost_analysis()`` (which DOES count elementwise FLOPs and total bytes
+accessed, but weights every while body once) so benchmarks can report the
+arithmetic intensity of a compiled kernel — e.g. the O(B*L) elementwise
+``lb:<name>`` envelope specs against the O(B*L^2) wavefront DP specs.
 """
 
 from __future__ import annotations
@@ -224,3 +230,40 @@ def parse_hlo_costs(hlo: str) -> Dict:
     coll_total["total_bytes"] = sum(coll_total.values())
     total["collectives"] = coll_total
     return total
+
+
+def kernel_cost_report(fn, *args) -> Dict:
+    """Compile ``fn(*args)`` and report its roofline inputs.
+
+    Combines two sources:
+
+    * ``compiled.cost_analysis()`` — the compiler's own estimate; counts
+      elementwise work and total HBM traffic (``flops`` / ``bytes``), but
+      weights every while body ONCE, so iterative DPs under-report;
+    * :func:`parse_hlo_costs` over the compiled HLO text — dot-only FLOPs
+      with ``known_trip_count`` weighting plus the while count
+      (``dot_flops`` / ``dot_bytes`` / ``n_while``), flagging when the
+      single-visit caveat above actually bites.
+
+    Returns ``{'flops', 'bytes', 'arithmetic_intensity', 'dot_flops',
+    'dot_bytes', 'n_while'}``; compiler fields are 0.0 when the backend
+    exposes no cost model (arithmetic intensity then reads 0.0 too).
+    """
+    import jax
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):      # older jax wraps it in a list
+        ca = ca[0] if ca else {}
+    ca = dict(ca or {})
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    parsed = parse_hlo_costs(compiled.as_text())
+    return {
+        "flops": flops,
+        "bytes": nbytes,
+        "arithmetic_intensity": flops / nbytes if nbytes else 0.0,
+        "dot_flops": parsed["flops"],
+        "dot_bytes": parsed["dot_bytes"],
+        "n_while": parsed["n_while"],
+    }

@@ -1,0 +1,347 @@
+"""Tiered LB cascade: per-tier soundness (``lb <= exact``, property-tested),
+precomputed envelope statistics, padded-row accounting audits, and hit-set +
+``{query, build}`` count parity of cascade-on vs cascade-off across
+matcher / window / fleet modes."""
+
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip, deterministic ones still run
+    HAVE_HYPOTHESIS = False
+
+from repro.core.counter import CountedDistance
+from repro.distances import bounds, get
+from repro.kernels import dispatch as kernel_dispatch
+from repro.kernels import registry as kernel_registry
+from repro.retrieval import RetrievalConfig, Retriever
+
+RNG = np.random.default_rng(77)
+
+#: the four alignment distances; levenshtein carries only the endpoint tier
+ALIGN = ["dtw", "erp", "frechet", "levenshtein"]
+ENVELOPED = ["dtw", "erp", "frechet"]
+
+
+def _ragged_batch(name, B=12, L=9, d=2, rng=RNG):
+    """Row-paired ragged batch (padded arrays + true length vectors)."""
+    if get(name).string:
+        xs = rng.integers(0, 6, size=(B, L))
+        ys = rng.integers(0, 6, size=(B, L))
+    else:
+        xs = rng.normal(scale=1.2, size=(B, L, d)).astype(np.float32)
+        ys = rng.normal(scale=1.2, size=(B, L, d)).astype(np.float32)
+    lx = rng.integers(2, L + 1, B)
+    ly = rng.integers(2, L + 1, B)
+    # garbage in the padding must never leak into a bound
+    for a, ln in ((xs, lx), (ys, ly)):
+        for i in range(B):
+            a[i, ln[i]:] = 9.0 if a.dtype.kind in "iu" else 1e3
+    return xs, ys, lx, ly
+
+
+def _exact(name, xs, ys, lx, ly):
+    return np.asarray(get(name).batch(xs, ys, lx, ly), np.float32)
+
+
+# -- tier soundness: lb(x, y) <= delta(x, y) ---------------------------------
+
+
+@pytest.mark.parametrize("name", ALIGN)
+def test_endpoint_tier_sound(name):
+    xs, ys, lx, ly = _ragged_batch(name)
+    exact = _exact(name, xs, ys, lx, ly)
+    lb = get(name).lower_bound(xs, ys, lx, ly)
+    assert (lb <= exact + 1e-3).all(), f"{name} endpoint bound exceeds exact"
+
+
+@pytest.mark.parametrize("name", ENVELOPED)
+def test_envelope_tier_sound_and_gathered_equals_recomputed(name):
+    xs, ys, lx, ly = _ragged_batch(name)
+    exact = _exact(name, xs, ys, lx, ly)
+    env_fn = get(name).envelope_bound
+    lb = env_fn(xs, ys, lx, ly)
+    assert (lb <= exact + 1e-3).all(), f"{name} envelope bound exceeds exact"
+    # y_env-gathered statistics reproduce the recomputed bound exactly
+    y_env = bounds.build_envelopes(ys, lens=ly)
+    lb_g = env_fn(xs, ys, lx, ly, y_env=y_env.take(np.arange(len(ys))))
+    np.testing.assert_allclose(lb_g, lb, rtol=1e-5, atol=1e-5)
+    # ... and dominates nothing it shouldn't: still a valid bound
+    assert (lb_g <= exact + 1e-3).all()
+
+
+@pytest.mark.parametrize("name", ENVELOPED)
+def test_one_direction_gathered_rows_sound(name):
+    """The fleet/device form (stored boxes only) is a valid lower bound."""
+    xs, ys, lx, ly = _ragged_batch(name)
+    exact = _exact(name, xs, ys, lx, ly)
+    e = bounds.build_envelopes(ys, lens=ly)
+    lb = bounds.lb_envelope_rows(name, xs, lx, e.lo, e.hi, e.mass)
+    assert (lb <= exact + 1e-3).all()
+
+
+@pytest.mark.parametrize("name", ENVELOPED)
+def test_device_envelope_spec_matches_host_bound(name):
+    """The ``lb:<name>`` KernelSpec mirrors the numpy envelope bound."""
+    xs, ys, lx, ly = _ragged_batch(name, B=6, L=7)
+    host = get(name).envelope_bound(xs, ys, lx, ly)
+    out = kernel_registry.get_envelope(name).batch(
+        xs, ys, lx, ly, eps=np.full(6, 1.0, np.float32), interpret=True)
+    np.testing.assert_allclose(np.asarray(out.dist), host,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(out.pruned), host > 1.0)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _series_pair(draw):
+        lx = draw(st.integers(2, 8))
+        ly = draw(st.integers(2, 8))
+        d = draw(st.integers(1, 3))
+        elems = st.floats(-4, 4, width=32)
+        x = draw(st.lists(st.lists(elems, min_size=d, max_size=d),
+                          min_size=lx, max_size=lx))
+        y = draw(st.lists(st.lists(elems, min_size=d, max_size=d),
+                          min_size=ly, max_size=ly))
+        return (np.array(x, np.float32), np.array(y, np.float32))
+
+    @settings(max_examples=40, deadline=None)
+    @given(_series_pair(), st.sampled_from(ENVELOPED))
+    def test_cascade_tiers_sound_property(pair, name):
+        """Every tier's bound <= the exact distance on arbitrary pairs."""
+        x, y = pair
+        L = max(len(x), len(y))
+        d = x.shape[1]
+        xs = np.zeros((1, L, d), np.float32)
+        ys = np.zeros((1, L, d), np.float32)
+        xs[0, :len(x)] = x
+        ys[0, :len(y)] = y
+        lx = np.array([len(x)])
+        ly = np.array([len(y)])
+        exact = _exact(name, xs, ys, lx, ly)
+        dist = get(name)
+        assert dist.lower_bound(xs, ys, lx, ly)[0] <= exact[0] + 1e-3
+        assert dist.envelope_bound(xs, ys, lx, ly)[0] <= exact[0] + 1e-3
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install .[dev])")
+    def test_cascade_tiers_sound_property():
+        pass
+
+
+# -- envelope statistics: build / take / extend ------------------------------
+
+
+def test_envelope_set_extend_matches_rebuild():
+    a = RNG.normal(size=(6, 5, 2)).astype(np.float32)
+    b = RNG.normal(size=(4, 8, 2)).astype(np.float32)  # longer windows
+    ea = bounds.build_envelopes(a)
+    ea.extend(bounds.build_envelopes(b))
+    assert len(ea.mass) == 10 and ea.cum.shape[1] == 9
+    np.testing.assert_allclose(ea.lo[6:], bounds.build_envelopes(b).lo,
+                               rtol=1e-6)
+    np.testing.assert_allclose(ea.mass[:6], bounds.build_envelopes(a).mass,
+                               rtol=1e-6)
+    # edge-padded prefix masses stay monotone and end at the total
+    assert (np.diff(ea.cum, axis=1) >= -1e-6).all()
+    np.testing.assert_allclose(ea.cum[np.arange(10), ea.lens], ea.mass,
+                               rtol=1e-6)
+    t = ea.take([7, 1])
+    np.testing.assert_allclose(t.hi[0], ea.hi[7], rtol=1e-6)
+
+
+def test_counter_extend_refreshes_envelope_cache():
+    data = RNG.normal(size=(8, 6, 2)).astype(np.float32)
+    c = CountedDistance(get("dtw"), data)
+    before = c.envelopes()
+    assert len(before.mass) == 8
+    extra = RNG.normal(size=(3, 6, 2)).astype(np.float32)
+    c.extend(extra)
+    after = c.envelopes()
+    assert len(after.mass) == 11
+    np.testing.assert_allclose(
+        after.mass[8:], bounds.build_envelopes(extra).mass, rtol=1e-6)
+
+
+# -- cascade staging + accounting in the counter -----------------------------
+
+
+def test_cascade_values_preserve_verdicts_and_counts():
+    data = RNG.normal(size=(40, 8, 2)).astype(np.float32)
+    c = CountedDistance(get("dtw"), data)
+    idxs = np.arange(40)
+    qs = np.repeat(data[3][None], 40, axis=0) \
+        + RNG.normal(scale=0.2, size=(40, 8, 2)).astype(np.float32)
+    exact = c.eval_stacked(qs, idxs, 8)
+    eps = float(np.median(exact))
+    c.reset()
+    got = c.eval_stacked(qs, idxs, 8, eps=eps, lb_tier="envelope")
+    # every <= eps verdict is preserved; pruned rows answer with a bound
+    np.testing.assert_array_equal(got <= eps, exact <= eps)
+    assert (got <= exact + 1e-3).all()
+    np.testing.assert_allclose(got[got <= eps], exact[got <= eps], rtol=1e-5)
+    # accounting: endpoint saw all 40 rows, exact only the survivors
+    assert c.lb_tier_rows["endpoint"] == 40
+    survivors = 40 - c.lb_tier_pruned["endpoint"]
+    assert c.lb_tier_rows.get("envelope", 0) == survivors
+    assert c.count == 40 - c.lb_tier_pruned["endpoint"] \
+        - c.lb_tier_pruned.get("envelope", 0)
+    assert c.lb_count == c.lb_tier_rows["endpoint"] \
+        + c.lb_tier_rows.get("envelope", 0)
+
+
+def test_cascade_exact_rows_opt_out_with_infinite_eps():
+    """+inf rows (value-consuming EXACT frontiers) bypass every tier."""
+    data = RNG.normal(size=(20, 6, 2)).astype(np.float32)
+    c = CountedDistance(get("erp"), data)
+    idxs = np.arange(20)
+    qs = RNG.normal(size=(20, 6, 2)).astype(np.float32)
+    exact = c.eval_stacked(qs, idxs, 6)
+    c.reset()
+    eps = np.full(20, 1e-6, np.float32)
+    eps[::2] = np.inf          # 10 EXACT rows
+    got = c.eval_stacked(qs, idxs, 6, eps=eps, lb_tier="envelope")
+    np.testing.assert_allclose(got[::2], exact[::2], rtol=1e-5)
+    assert c.lb_tier_rows["endpoint"] == 10   # finite-eps rows only
+    assert c.count >= 10                      # all EXACT rows dispatched
+
+
+def test_padded_rows_never_counted_in_packed_cascade():
+    """Satellite audit: pow2 batch padding inside the kernel registry must
+    not leak into lb_count, the per-tier maps, or DispatchStats."""
+    B = 5                                      # pads to 8 inside spec.batch
+    data = RNG.normal(size=(30, 6, 2)).astype(np.float32)
+    c = CountedDistance(get("dtw"), data, backend="pallas")
+    idxs = np.arange(B)
+    qs = RNG.normal(size=(B, 6, 2)).astype(np.float32)
+    kernel_dispatch.STATS.reset()
+    c.eval_stacked(qs, idxs, 6, eps=0.5, lb_tier="envelope")
+    assert c.lb_tier_rows["endpoint"] == B
+    env_rows = c.lb_tier_rows.get("envelope", 0)
+    assert env_rows <= B
+    assert c.lb_count == B + env_rows
+    assert c.count <= B
+    # the dispatcher's per-tier stats count requested rows, not padded ones
+    assert kernel_dispatch.STATS.lb_rows.get("envelope", 0) == env_rows
+    assert kernel_dispatch.STATS.lb_pruned.get("envelope", 0) \
+        == c.lb_tier_pruned.get("envelope", 0)
+
+
+def test_packed_envelope_empty_batch_records_nothing():
+    kernel_dispatch.STATS.reset()
+    out = kernel_dispatch.packed_envelope(
+        "dtw", np.zeros((0, 4, 2), np.float32), np.zeros((0, 4, 2),
+                                                         np.float32),
+        eps=1.0)
+    assert len(np.asarray(out.dist)) == 0
+    assert kernel_dispatch.STATS.lb_rows.get("envelope", 0) == 0
+
+
+# -- parity: cascade-on == cascade-off, across modes -------------------------
+
+
+def _series(n, l=8, rng=None):
+    rng = rng or RNG
+    steps = rng.normal(scale=0.3, size=(n, l, 2))
+    return np.cumsum(steps, axis=1).astype(np.float32)
+
+
+@pytest.mark.parametrize("name,index", [("dtw", "linear"),
+                                        ("erp", "refnet"),
+                                        ("frechet", "refnet")])
+def test_window_mode_parity_all_tiers(name, index):
+    data = _series(80)
+    r = Retriever.build(RetrievalConfig(name, index=index), data)
+    qs = data[[3, 40, 71]] + 0.05
+    eps = 1.0
+    r.reset_counter()
+    off = r.batch(qs).via("batched").range(eps)
+    for tier in ("endpoint", "envelope"):
+        r.reset_counter()
+        res = r.batch(qs).via("batched").lb(tier).range(eps)
+        assert res.hits == off.hits, f"{name}/{tier} changed hits"
+        assert res.stats["build"] == off.stats["build"]
+        assert res.stats["query"] <= off.stats["query"], \
+            f"{name}/{tier} increased exact evals"
+        assert res.stats["lb"] > 0
+
+
+def test_matcher_mode_parity():
+    rng = np.random.default_rng(5)
+    seqs = [np.cumsum(rng.normal(scale=0.3, size=(60, 2)),
+                      axis=0).astype(np.float32) for _ in range(3)]
+    Q = np.cumsum(rng.normal(scale=0.3, size=(24, 2)),
+                  axis=0).astype(np.float32)
+    Q[4:14] = seqs[0][8:18]
+    r = Retriever.build(
+        RetrievalConfig("dtw", lam=8, lambda0=2, index="linear"), seqs)
+    off = r.query(Q).range(2.0)
+    for tier in ("endpoint", "envelope"):
+        res = r.query(Q).lb(tier).range(2.0)
+        assert res.hits == off.hits, f"matcher/{tier} changed hits"
+
+
+def test_fleet_mode_envelope_parity_and_stats():
+    data = _series(60)
+    qs = data[[2, 31, 47]]
+    base = dict(execution="fleet", workers=["a", "b", "c"],
+                tight_bounds=True)
+    r_off = Retriever.build(RetrievalConfig("erp", **base), data)
+    r_env = Retriever.build(
+        RetrievalConfig("erp", lb_cascade="envelope", **base), data)
+    eps = 1.0
+    off = r_off.batch(qs).range(eps)
+    env = r_env.batch(qs).range(eps)
+    assert env.hits == off.hits
+    stats = r_env.elastic().device_stats
+    assert stats["lb_rows"] > 0
+    assert stats["member_evals"] <= r_off.elastic().device_stats[
+        "member_evals"]
+    # per-call modifier: lb('off') disables the configured cascade
+    again = r_env.batch(qs).lb("off").range(eps)
+    assert again.hits == off.hits
+
+
+def test_fleet_oneshot_device_cascade_parity():
+    from repro.core.distributed import (device_range_query, flatten_net,
+                                        host_reference_hits)
+    from repro.core.refnet import ReferenceNet
+    data = _series(48)
+    net = ReferenceNet("erp", data, eps_prime=1.0, tight_bounds=True).build()
+    flat = flatten_net(net)
+    assert flat.envelopes is not None
+    qs = data[[1, 17, 33]]
+    eps = 1.0
+    want = host_reference_hits(flat, qs, eps)
+    hits_off, st_off = device_range_query(flat, qs, eps)
+    hits_env, st_env = device_range_query(flat, qs, eps,
+                                          lb_cascade="envelope")
+    assert (hits_off == want).all() and (hits_env == want).all()
+    assert st_env["lb_rows"] > 0
+    assert st_env["member_evals"] <= st_off["member_evals"]
+
+
+# -- config plumbing ---------------------------------------------------------
+
+
+def test_config_tier_normalization_and_roundtrip():
+    assert RetrievalConfig("dtw", index="linear").lb_cascade == "off"
+    assert RetrievalConfig("dtw", index="linear",
+                           lb_cascade=True).lb_cascade == "endpoint"
+    cfg = RetrievalConfig("dtw", index="linear", lb_cascade="envelope")
+    back = RetrievalConfig.from_json(cfg.to_json())
+    assert back.lb_cascade == "envelope"
+    assert json.loads(cfg.to_json())["lb_cascade"] == "envelope"
+    with pytest.raises(ValueError, match="lb_cascade"):
+        RetrievalConfig("dtw", index="linear", lb_cascade="sideways")
+
+
+def test_fleet_config_accepts_envelope_rejects_endpoint():
+    base = dict(execution="fleet", workers=2)
+    RetrievalConfig("levenshtein", lb_cascade="envelope", **base)
+    for bad in ("endpoint", True):
+        with pytest.raises(ValueError, match="envelope"):
+            RetrievalConfig("levenshtein", lb_cascade=bad, **base)
