@@ -26,9 +26,17 @@ import sys
 #: deterministic, seed-fixed metrics: any increase is a real regression
 #: (``traces`` = kernel recompiles on a warm sweep; ``fused_pruned`` is
 #: gated through ``evals_frac`` — the *unpruned* fraction — so that a
-#: weaker prune certificate reads as the increase it is)
+#: weaker prune certificate reads as the increase it is; the space keys
+#: — ``list_entries``/``entries_per_obj``/``avg_parents``/``max_parents``/
+#: ``size_mb`` — gate figs 5-7 index-overhead growth)
 COUNT_KEYS = ("evals_frac", "dispatches", "build_evals", "build_dispatches",
-              "lb_evals", "rounds", "traces")
+              "lb_evals", "rounds", "traces", "list_entries",
+              "entries_per_obj", "avg_parents", "max_parents", "size_mb")
+
+#: exactness metrics (hit-set fractions from the fig-12 matching curves):
+#: deterministic for fixed seeds and gated on ANY change — a decrease is
+#: missed hits, an increase is spurious hits
+EXACT_KEYS = ("uniq_frac", "consec_frac")
 
 
 def _rows_by_name(rows):
@@ -56,6 +64,11 @@ def compare(baseline_rows, report_rows, tolerance: float):
                 counts.append(
                     f"{name}: {key} rose {b[key]} -> {r[key]} "
                     "(pruning/batching regression)")
+        for key in EXACT_KEYS:
+            if key in b and key in r and float(r[key]) != float(b[key]):
+                counts.append(
+                    f"{name}: {key} changed {b[key]} -> {r[key]} "
+                    "(hit-set exactness drift)")
     return compared, timing, counts
 
 

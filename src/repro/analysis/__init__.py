@@ -1,0 +1,20 @@
+"""Substrate invariant linter — AST passes over ``src/repro``.
+
+Five passes make the architecture rules of PRs 1-7 machine-checked (see
+``docs/architecture.md`` § "Substrate invariants"):
+
+=================  ========================================================
+pass               invariant
+=================  ========================================================
+``dispatch``       no per-item device dispatch inside loops (PR 2/5/6)
+``trace``          nothing breaks the one-compile-per-shape jit cache (PR 5)
+``accounting``     every distance is counted; padding rows never are (PR 1/5)
+``sentinel``       BIG quasi-infinity arithmetic is always clamped (PR 5)
+``shims``          deprecation shims warn and document v0.2 removal (PR 4)
+=================  ========================================================
+
+CLI: ``python tools/lint.py [--format=json] [--root src/repro]``.
+"""
+
+from repro.analysis.core import (Finding, Module, pass_names,  # noqa: F401
+                                 register, render_human, run, to_json)

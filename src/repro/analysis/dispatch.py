@@ -1,0 +1,86 @@
+"""dispatch-discipline pass — no per-item device dispatch inside loops.
+
+The whole PR-5/6 substrate exists so that retrieval never pays one backend
+dispatch per segment/candidate/shard: plans yield frontiers, the engine
+merges them, and each merged round is ONE packed call.  A new call site
+that loops ``Distance.batch`` / ``KernelSpec.device_call`` /
+``dispatch.packed_batch`` / ``CountedDistance.eval_stacked`` (or a
+per-query ``range_query``) inside a ``for``/``while`` body silently
+reintroduces the antipattern — until a bench baseline catches the
+dispatch-count rise.  This pass catches it at lint time.
+
+Rules
+-----
+``dispatch-in-loop``
+    A call whose terminal name is a dispatch entry point executes once per
+    loop iteration, outside the whitelisted engine drivers
+    (``core/batch_engine.py`` drives frontiers by contract;
+    ``core/counter.py`` owns the backend dispatch itself).
+``dispatch-jit-in-loop``
+    A callable bound from ``jax.jit(...)`` in the enclosing function is
+    invoked inside a loop body — the per-item-dispatch antipattern in its
+    rawest form (and usually a fresh-trace leak too; see trace-safety).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import (Finding, Module, call_terminal,
+                                 calls_in_loops, is_jax_jit,
+                                 module_functions, register)
+
+#: terminal callable names that are device/batched dispatch entry points
+DISPATCH_NAMES = {"batch", "device_call", "packed_batch", "packed_envelope",
+                  "eval_stacked", "range_query"}
+
+#: modules allowed to drive dispatch from loops: the batch engine IS the
+#: loop the substrate sanctions (one packed dispatch per merged round), and
+#: the counter owns the backend call under it
+ENGINE_DRIVERS = ("core/batch_engine.py", "core/counter.py")
+
+
+@register("dispatch")
+def check(mod: Module) -> List[Finding]:
+    if mod.rel.endswith(ENGINE_DRIVERS):
+        return []
+    out: List[Finding] = []
+    for func in [mod.tree] + module_functions(mod.tree):
+        jitted = _jit_bound_names(func)
+        for call in calls_in_loops(func):
+            name = call_terminal(call)
+            if name in DISPATCH_NAMES:
+                out.append(Finding(
+                    mod.rel, call.lineno, "dispatch-in-loop",
+                    f"'{name}(...)' runs once per loop iteration; batch "
+                    "the items and dispatch once (engine round / packed "
+                    "call), or drive through core/batch_engine"))
+            elif (isinstance(call.func, ast.Name)
+                  and call.func.id in jitted):
+                out.append(Finding(
+                    mod.rel, call.lineno, "dispatch-jit-in-loop",
+                    f"jitted callable '{call.func.id}' is invoked per "
+                    "loop iteration; stack the batch and call it once"))
+    # module-level statements double as function bodies above via mod.tree;
+    # dedupe (a call can appear under both the module walk and a def walk)
+    seen = set()
+    uniq = []
+    for f in out:
+        key = (f.line, f.rule, f.message)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+    return uniq
+
+
+def _jit_bound_names(func: ast.AST) -> set:
+    """Local names assigned directly from ``jax.jit(...)`` in ``func``."""
+    names = set()
+    for node in ast.walk(func):
+        if (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)
+                and is_jax_jit(node.value.func)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names

@@ -1,0 +1,358 @@
+"""trace-safety pass — the static mirror of the ``STATS["traces"]==0`` gate.
+
+The kernel registry compiles each shape class exactly once; the warm-sweep
+benchmarks pin ``traces == 0``.  Everything that silently breaks that gate
+at a call site — Python branching on traced values, host concretization,
+``np.`` calls inside traced code, per-call ``jax.jit`` wrapping, unhashable
+or loop-rebound static arguments — is visible in the AST.
+
+A *jit region* is: a function decorated with ``jax.jit`` (bare or via
+``partial(jax.jit, static_argnums=...)``), a function or lambda passed to
+``jax.jit(...)``, a Pallas kernel body (>= 2 parameters ending in
+``_ref``), or a module-local function called from any of those (one hop).
+
+Rules
+-----
+``trace-host-branch``
+    ``if``/``while``/ternary on a traced value inside a jit region.
+    Static-safe tests are exempt: shape attrs (``.shape``/``.ndim``/
+    ``.dtype``/``.size``), ``len()``/``isinstance()``, ``is None`` checks,
+    and parameters declared static via ``static_argnums``/``-names``.
+``trace-concretize``
+    ``float()``/``int()``/``bool()`` over a traced value, or ``.item()``,
+    inside a jit region — forces a host sync and breaks tracing.
+``trace-numpy-call``
+    ``np.``/``numpy.`` call inside a jit region (silently constant-folds
+    the traced value or raises at trace time) — use ``jnp``.
+``trace-fresh-jit``
+    ``jax.jit(...)`` bound to a plain local inside a function: a fresh
+    traced callable per call.  Sanctioned cache patterns are exempt — a
+    subscript store (``_CACHE[key] = fn``, the registry pattern) or an
+    attribute store (``self.step_fn = jax.jit(...)``, construct-once).
+``trace-static-unhashable``
+    A list/set/dict literal passed in a static-argument position of a
+    locally-resolvable jitted callable (TypeError at call time).
+``trace-static-rebound``
+    A static-position argument rebound inside the very loop that calls the
+    jitted callable: every iteration is a recompile.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, Module, call_terminal, dotted,
+                                 is_jax_jit, module_functions, register)
+
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+STATIC_SAFE_CALLS = {"len", "isinstance", "getattr", "hasattr"}
+
+
+def _jit_decorator_statics(func) -> Optional[Tuple[Set[int], Set[str]]]:
+    """(static positions, static names) if ``func`` is jit-decorated."""
+    for dec in getattr(func, "decorator_list", []):
+        if is_jax_jit(dec):
+            return set(), set()
+        if isinstance(dec, ast.Call):
+            target = dec.func
+            if is_jax_jit(target):
+                return _statics_from_keywords(dec)
+            if dotted(target) in ("partial", "functools.partial") and \
+                    dec.args and is_jax_jit(dec.args[0]):
+                return _statics_from_keywords(dec)
+    return None
+
+
+def _statics_from_keywords(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+        elif kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+    return nums, names
+
+
+def _params(func) -> List[str]:
+    a = func.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _is_pallas_kernel(func) -> bool:
+    params = _params(func)
+    return sum(p.endswith("_ref") for p in params) >= 2
+
+
+def _collect_regions(mod: Module):
+    """[(func node, static positions, static names)] plus one-hop callees."""
+    regions = []
+    by_name: Dict[str, ast.AST] = {
+        f.name: f for f in module_functions(mod.tree)}
+
+    for func in module_functions(mod.tree):
+        statics = _jit_decorator_statics(func)
+        if statics is not None:
+            regions.append((func, *statics))
+        elif _is_pallas_kernel(func):
+            regions.append((func, set(), set()))
+
+    # functions/lambdas passed to jax.jit(...) at any nesting level
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and is_jax_jit(node.func) and node.args:
+            arg = node.args[0]
+            target = None
+            if isinstance(arg, ast.Lambda):
+                target = arg
+            elif isinstance(arg, ast.Name) and arg.id in by_name:
+                target = by_name[arg.id]
+            else:
+                # jax.jit(local_def) where local_def is nested: resolve by
+                # scanning the enclosing scopes' defs
+                if isinstance(arg, ast.Name):
+                    for f in module_functions(mod.tree):
+                        if f.name == arg.id:
+                            target = f
+                            break
+            if target is not None and \
+                    not any(target is r[0] for r in regions):
+                regions.append((target, *_statics_from_keywords(node)))
+
+    # one-hop reachability: module-local defs called from a region body
+    for func, _, _ in list(regions):
+        for node in ast.walk(func):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                callee = by_name.get(node.func.id)
+                if callee is not None and \
+                        not any(callee is r[0] for r in regions):
+                    regions.append((callee, set(), set()))
+    return regions
+
+
+def _traced_params(func, static_nums: Set[int],
+                   static_names: Set[str]) -> Set[str]:
+    params = _params(func)
+    traced = set(params) - static_names - {"self", "cls"}
+    for i in static_nums:
+        if i < len(params):
+            traced.discard(params[i])
+    return traced
+
+
+def _name_is_static_safe(mod: Module, name: ast.Name, test: ast.AST) -> bool:
+    """Traced-name reference that is still trace-safe in a branch test."""
+    node: ast.AST = name
+    for anc in mod.ancestors(name):
+        if isinstance(anc, ast.Attribute) and anc.attr in SHAPE_ATTRS:
+            return True
+        if isinstance(anc, ast.Call) and \
+                call_terminal(anc) in STATIC_SAFE_CALLS:
+            return True
+        if isinstance(anc, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot)) for op in anc.ops):
+            return True
+        if anc is test:
+            break
+        node = anc
+    return False
+
+
+@register("trace")
+def check(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    regions = _collect_regions(mod)
+    region_funcs = [r[0] for r in regions]
+
+    for func, static_nums, static_names in regions:
+        traced = _traced_params(func, static_nums, static_names)
+        # include nested defs' params (fori_loop bodies etc.); nested defs
+        # that are themselves separate regions get their own scan
+        for inner in ast.walk(func):
+            if isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and inner is not func \
+                    and not any(inner is f for f in region_funcs):
+                traced |= set(_params(inner)) - {"self", "cls"}
+
+        for node in ast.walk(func):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                test = node.test
+                for n in ast.walk(test):
+                    if isinstance(n, ast.Name) and n.id in traced and \
+                            not _name_is_static_safe(mod, n, test):
+                        out.append(Finding(
+                            mod.rel, test.lineno, "trace-host-branch",
+                            f"Python branch on traced value '{n.id}' "
+                            "inside a jit region; use lax.cond/select or "
+                            "declare the argument static"))
+                        break
+            elif isinstance(node, ast.Call):
+                name = call_terminal(node)
+                if isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int", "bool"):
+                    if any(isinstance(n, ast.Name) and n.id in traced
+                           for a in node.args for n in ast.walk(a)):
+                        out.append(Finding(
+                            mod.rel, node.lineno, "trace-concretize",
+                            f"'{node.func.id}()' concretizes a traced "
+                            "value inside a jit region (host sync / "
+                            "TracerError)"))
+                elif name == "item" and isinstance(node.func, ast.Attribute):
+                    out.append(Finding(
+                        mod.rel, node.lineno, "trace-concretize",
+                        "'.item()' concretizes a traced value inside a "
+                        "jit region"))
+                elif isinstance(node.func, ast.Attribute):
+                    root = dotted(node.func)
+                    if root and root.split(".")[0] in ("np", "numpy"):
+                        out.append(Finding(
+                            mod.rel, node.lineno, "trace-numpy-call",
+                            f"'{root}(...)' inside a jit region constant-"
+                            "folds or fails under tracing; use jnp"))
+
+    out.extend(_check_fresh_jit(mod))
+    out.extend(_check_static_args(mod))
+    return out
+
+
+def _check_fresh_jit(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for func in module_functions(mod.tree):
+        # names stored through the sanctioned cache patterns in this func
+        cached: Set[str] = set()
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assign):
+                stored = any(isinstance(t, (ast.Subscript, ast.Attribute))
+                             for t in node.targets)
+                if stored:
+                    for n in ast.walk(node.value):
+                        if isinstance(n, ast.Name):
+                            cached.add(n.id)
+                    if isinstance(node.value, ast.Call) and \
+                            is_jax_jit(node.value.func):
+                        cached.add("<inline>")
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Call) and is_jax_jit(node.func)):
+                continue
+            parent = mod.parents().get(node)
+            if isinstance(parent, ast.Attribute) and \
+                    parent.attr in ("lower", "trace"):
+                continue              # AOT introspection: jit(fn).lower(..)
+            if isinstance(parent, ast.Assign):
+                targets = parent.targets
+                if any(isinstance(t, (ast.Subscript, ast.Attribute))
+                       for t in targets):
+                    continue          # CACHE[key] = / self.fn = : sanctioned
+                if any(isinstance(t, ast.Name) and t.id in cached
+                       for t in targets):
+                    continue          # fn = jax.jit(..); CACHE[key] = fn
+                names = {t.id for t in targets if isinstance(t, ast.Name)}
+                if names and _only_aot_uses(mod, func, names):
+                    continue          # fn = jax.jit(..); fn.lower(...): AOT
+            out.append(Finding(
+                mod.rel, node.lineno, "trace-fresh-jit",
+                "jax.jit(...) creates a fresh traced callable per call; "
+                "hoist it or store it in a module-level cache "
+                "(see kernels/registry.KernelSpec._cached)"))
+    return out
+
+
+def _only_aot_uses(mod: Module, func: ast.AST, names: Set[str]) -> bool:
+    """True when every read of ``names`` in ``func`` is an AOT access
+    (``fn.lower(...)``/``.trace``/``.compile``) — the callable is never
+    dispatched, so there is no per-call retrace to leak."""
+    uses = [n for n in ast.walk(func)
+            if isinstance(n, ast.Name) and n.id in names
+            and isinstance(n.ctx, ast.Load)]
+    if not uses:
+        return False
+    parents = mod.parents()
+    for n in uses:
+        p = parents.get(n)
+        if not (isinstance(p, ast.Attribute)
+                and p.attr in ("lower", "trace", "compile")):
+            return False
+    return True
+
+
+def _jitted_static_positions(mod: Module) -> Dict[str, Set[int]]:
+    """Jitted module-level defs -> static arg positions, plus defs that
+    forward their own params into those positions (one hop)."""
+    statics: Dict[str, Set[int]] = {}
+    for func in module_functions(mod.tree):
+        got = _jit_decorator_statics(func)
+        if got and got[0]:
+            statics[func.name] = got[0]
+    # one-hop forwarding: def run(cap): return _jitted(..., cap, ...)
+    for func in module_functions(mod.tree):
+        if func.name in statics:
+            continue
+        params = _params(func)
+        fwd: Set[int] = set()
+        for node in ast.walk(func):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in statics:
+                for pos in statics[node.func.id]:
+                    if pos < len(node.args):
+                        a = node.args[pos]
+                        if isinstance(a, ast.Name) and a.id in params:
+                            fwd.add(params.index(a.id))
+        if fwd:
+            statics[func.name] = fwd
+    return statics
+
+
+def _check_static_args(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    statics = _jitted_static_positions(mod)
+    if not statics:
+        return out
+    for func in module_functions(mod.tree):
+        for loop in ast.walk(func):
+            if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                continue
+            rebound = set()
+            if isinstance(loop, (ast.For, ast.AsyncFor)):
+                rebound |= {n.id for n in ast.walk(loop.target)
+                            if isinstance(n, ast.Name)}
+            for stmt in loop.body + loop.orelse:
+                for n in ast.walk(stmt):
+                    if isinstance(n, ast.Name) and \
+                            isinstance(n.ctx, ast.Store):
+                        rebound.add(n.id)
+            for stmt in loop.body + loop.orelse:
+                for node in ast.walk(stmt):
+                    if not (isinstance(node, ast.Call)
+                            and isinstance(node.func, ast.Name)
+                            and node.func.id in statics):
+                        continue
+                    for pos in statics[node.func.id]:
+                        if pos >= len(node.args):
+                            continue
+                        a = node.args[pos]
+                        if isinstance(a, ast.Name) and a.id in rebound:
+                            out.append(Finding(
+                                mod.rel, node.lineno,
+                                "trace-static-rebound",
+                                f"static arg '{a.id}' of jitted "
+                                f"'{node.func.id}' is rebound in this "
+                                "loop: every iteration recompiles"))
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in statics):
+                continue
+            for pos in statics[node.func.id]:
+                if pos < len(node.args) and isinstance(
+                        node.args[pos], (ast.List, ast.Set, ast.Dict)):
+                    out.append(Finding(
+                        mod.rel, node.lineno, "trace-static-unhashable",
+                        f"unhashable literal in static position {pos} of "
+                        f"jitted '{node.func.id}' (TypeError at call "
+                        "time); pass a tuple"))
+    return out

@@ -22,6 +22,19 @@ from repro.core.segmentation import Window
 from repro.models.layers import Ctx, NOCTX
 
 
+#: jitted forward per (model, cfg, ctx) — one trace per token length across
+#: repeated embedding sweeps instead of a fresh trace per embed_windows call
+_FWD_CACHE: dict = {}
+
+
+def _forward_fn(model, cfg, ctx: Ctx):
+    key = (id(model), id(cfg), id(ctx))
+    if key not in _FWD_CACHE:
+        _FWD_CACHE[key] = jax.jit(
+            lambda p, b: model.forward(p, b, cfg, ctx, return_hidden=True))
+    return _FWD_CACHE[key]
+
+
 def embed_windows(model, params, cfg, token_seqs: Sequence[np.ndarray],
                   window: int, *, ctx: Ctx = NOCTX, stride: Optional[int] = None,
                   normalize: bool = True) -> Tuple[np.ndarray, List[Window]]:
@@ -32,13 +45,23 @@ def embed_windows(model, params, cfg, token_seqs: Sequence[np.ndarray],
     matching the paper's database segmentation).
     """
     stride = stride or window
-    fwd = jax.jit(lambda p, b: model.forward(p, b, cfg, ctx,
-                                             return_hidden=True))
+    fwd = _forward_fn(model, cfg, ctx)
+    seqs = [np.asarray(t) for t in token_seqs]
+    # one stacked forward per token length: sequences sharing a shape ride a
+    # single dispatch (and a single trace) instead of one call each
+    by_len: dict = {}
+    for sid, toks in enumerate(seqs):
+        by_len.setdefault(toks.shape[0], []).append(sid)
+    hidden: dict = {}
+    for sids in by_len.values():
+        hs = np.asarray(
+            fwd(params, {"tokens": jnp.asarray(np.stack([seqs[i] for i in sids]))}),
+            np.float32)  # (B, S, d)
+        for row, sid in enumerate(sids):
+            hidden[sid] = hs[row]
     feats, meta = [], []
-    for sid, toks in enumerate(token_seqs):
-        toks = np.asarray(toks)[None, :]
-        h = np.asarray(fwd(params, {"tokens": jnp.asarray(toks)})[0],
-                       np.float32)  # (S, d)
+    for sid in range(len(seqs)):
+        h = hidden[sid]  # (S, d)
         for start in range(0, h.shape[0] - window + 1, stride):
             w = h[start:start + window].mean(axis=0)
             feats.append(w)

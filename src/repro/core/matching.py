@@ -222,6 +222,7 @@ class SubsequenceMatcher:
                         distance=math.nan))
             return hits
         for ln, (arr, segs) in buckets.items():
+            # lint: allow[dispatch-in-loop] -- legacy batched=False path kept as the sequential parity reference for the engine tests
             per_seg = [self.index.range_query(
                 a, eps, q_len=ln, lb_cascade=self.lb_cascade)
                 for a in arr]
@@ -453,6 +454,7 @@ def brute_force_range(dist: dist_base.Distance, Q, seqs, lam, lambda0, eps,
                     for qe in range(qs + lam, len(Q) + 1):
                         if abs((xe - xs) - (qe - qs)) > lambda0:
                             continue
+                        # lint: allow[dispatch-in-loop,acct-raw-kernel-call] -- brute-force oracle: deliberately unindexed and uncounted (the gold standard the counted paths are tested against)
                         d = float(batch(Q[None, qs:qe], X[None, xs:xe])[0])
                         if d <= eps:
                             out.append(MatchPair(sid, xs, xe - xs, qs,

@@ -95,6 +95,7 @@ def dedup_corpus(corpus: np.ndarray, *, lam: int = 16, eps: float = 1.0,
     """Drop near-duplicate documents using the paper's machinery: each doc's
     windows are range-queried against a reference net of all previously kept
     windows; a doc whose windows overwhelmingly hit is a near-duplicate."""
+    from repro.core.batch_engine import BatchEngine
     from repro.core.counter import CountedDistance
     from repro.core.refnet import ReferenceNet
     from repro.core.segmentation import partition_windows
@@ -114,7 +115,11 @@ def dedup_corpus(corpus: np.ndarray, *, lam: int = 16, eps: float = 1.0,
             net = ReferenceNet(dist, np.stack(data_rows), eps_prime=1.0,
                                tight_bounds=True).build()
             continue
-        hits = sum(bool(net.range_query(w, eps)) for w in wins)
+        # one engine batch probes every window of the doc concurrently
+        # (hit sets and eval counts match the sequential per-window loop)
+        probe = BatchEngine(net.counter).run(
+            [net.range_query_plan(eps) for _ in wins], list(wins), eps)
+        hits = sum(bool(h) for h in probe)
         if hits >= max(1, int(0.9 * len(wins))):
             continue  # near-duplicate: drop
         kept.append(doc)

@@ -328,6 +328,7 @@ class ElasticIndex:
                 s = self.shards.get(w)
                 if w in dead or s is None:
                     continue
+                # lint: allow[dispatch-in-loop] -- host per-shard parity loop: the sequential reference the stacked fleet path is asserted against
                 for local in s.net.range_query(q, eps, qlen):
                     out.append(int(s.gids[local]))
             return sorted(out)

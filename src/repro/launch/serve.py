@@ -27,6 +27,7 @@ import time
 
 import numpy as np
 
+from repro.core.batch_engine import BatchEngine
 from repro.data import synthetic
 from repro.retrieval import RetrievalConfig, Retriever
 
@@ -104,11 +105,17 @@ def main():
     t0 = time.time()
     part_hits = fleet.batch(queries).dead(workers[0]).range(args.eps)
     rep = replica.elastic().index.shards[workers[0]]
-    stolen_hits = 0
-    for part, q in zip(part_hits, queries):
-        extra = [int(rep.gids[i])
-                 for i in rep.net.range_query(q, args.eps)] if rep else []
-        stolen_hits += len(set(part) | set(extra))
+    if rep:
+        # the replica answers the dead shard's share as ONE engine batch
+        # (all stolen queries share a merged frontier round)
+        stolen = BatchEngine(rep.net.counter).run(
+            [rep.net.range_query_plan(args.eps) for _ in queries],
+            list(queries), args.eps)
+        extras = [[int(rep.gids[i]) for i in local] for local in stolen]
+    else:
+        extras = [[] for _ in queries]
+    stolen_hits = sum(len(set(part) | set(extra))
+                      for part, extra in zip(part_hits, extras))
     steal_s = time.time() - t0
     assert stolen_hits == n_hits, "work stealing must preserve exactness"
 

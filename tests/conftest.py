@@ -1,0 +1,27 @@
+"""Shared test fixtures — the runtime sanitizer lane.
+
+``REPRO_SANITIZE=1`` wraps every test in ``jax.checking_leaks()``, which
+raises on tracer leaks (a traced value escaping its jit region — the
+runtime complement of the static ``trace`` lint pass).  CI's sanitizer
+lane runs the kernel-registry and bounds-cascade suites under this plus
+``JAX_DEBUG_NANS=1``; locally it is off by default because leak checking
+disables some caching and slows tracing down.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _sanitize_tracer_leaks():
+    if os.environ.get("REPRO_SANITIZE") != "1":
+        yield
+        return
+    import jax
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.checking_leaks())
+        yield

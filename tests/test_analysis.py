@@ -1,0 +1,359 @@
+"""Fixture tests for the substrate invariant linter (``repro.analysis``).
+
+Each pass gets a violation fixture that must trip its exact rule id and a
+clean twin that must not; the pragma machinery gets suppression +
+missing-justification coverage; and the end-to-end test asserts the real
+tree under ``src/repro`` is clean with at most the pragma budget in use —
+the same gate CI's ``lint`` job enforces.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import textwrap
+
+import pytest
+
+from repro import analysis
+from repro.analysis.core import PRAGMA_RULE
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def lint_source(tmp_path, source: str, *, select=None, name="mod.py"):
+    path = tmp_path / name
+    path.write_text(textwrap.dedent(source))
+    findings, stats = analysis.run(tmp_path, select=select, files=[path])
+    return [f.rule for f in findings], findings, stats
+
+
+def rules_of(tmp_path, source, select):
+    return lint_source(tmp_path, source, select=select)[0]
+
+
+# -- dispatch discipline ------------------------------------------------------
+
+def test_dispatch_in_loop_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        def sweep(net, queries, eps):
+            out = []
+            for q in queries:
+                out.append(net.range_query(q, eps))
+            return out
+        """, ["dispatch"])
+    assert rules == ["dispatch-in-loop"]
+
+
+def test_dispatch_in_comprehension_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        def sweep(net, queries, eps):
+            return [net.range_query(q, eps) for q in queries]
+        """, ["dispatch"])
+    assert rules == ["dispatch-in-loop"]
+
+
+def test_dispatch_clean_engine_batch(tmp_path):
+    rules = rules_of(tmp_path, """
+        def sweep(engine, net, queries, eps):
+            plans = [net.range_query_plan(eps) for _ in queries]
+            return engine.run(plans, list(queries), eps)
+        """, ["dispatch"])
+    assert rules == []
+
+
+def test_dispatch_iterable_source_not_flagged(tmp_path):
+    # the FIRST generator's source runs once, not per iteration
+    rules = rules_of(tmp_path, """
+        def count(fleet, queries, eps):
+            return sum(len(h) for h in fleet.batch(queries).range(eps))
+        """, ["dispatch"])
+    assert rules == []
+
+
+def test_dispatch_jit_in_loop_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+
+        def embed(model, rows):
+            fwd = jax.jit(model.forward)
+            return [fwd(r) for r in rows]
+        """, ["dispatch"])
+    assert rules == ["dispatch-jit-in-loop"]
+
+
+# -- trace safety -------------------------------------------------------------
+
+def test_trace_host_branch_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+        """, ["trace"])
+    assert rules == ["trace-host-branch"]
+
+
+def test_trace_shape_branch_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            if x.ndim == 1:
+                x = x[None, :]
+            return jnp.where(x > 0, x, -x)
+        """, ["trace"])
+    assert rules == []
+
+
+def test_trace_concretize_and_numpy_trip(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def step(x):
+            y = float(x)
+            return np.sum(x) + y
+        """, ["trace"])
+    assert set(rules) == {"trace-concretize", "trace-numpy-call"}
+
+
+def test_trace_fresh_jit_trips_and_cache_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+
+        def hot(g, x):
+            fn = jax.jit(g)
+            return fn(x)
+        """, ["trace"])
+    assert rules == ["trace-fresh-jit"]
+    rules = rules_of(tmp_path, """
+        import jax
+
+        _CACHE = {}
+
+        def hot(g, x):
+            if id(g) not in _CACHE:
+                _CACHE[id(g)] = jax.jit(g)
+            return _CACHE[id(g)](x)
+        """, ["trace"], )
+    assert rules == []
+
+
+def test_trace_aot_lower_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+
+        def lower(g, x):
+            fn = jax.jit(g)
+            return fn.lower(x)
+        """, ["trace"])
+    assert rules == []
+
+
+def test_trace_static_unhashable_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnums=(1,))
+        def f(x, dims):
+            return x.sum(dims)
+
+        def call(x):
+            return f(x, [0, 1])
+        """, ["trace"])
+    assert rules == ["trace-static-unhashable"]
+
+
+def test_trace_static_rebound_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnums=(1,))
+        def f(x, cap):
+            return x[:cap]
+
+        def drive(x, cap):
+            while True:
+                out = f(x, cap)
+                if out.shape[0] <= cap:
+                    break
+                cap *= 2
+            return out
+        """, ["trace"])
+    assert rules == ["trace-static-rebound"]
+
+
+# -- accounting soundness -----------------------------------------------------
+
+def test_acct_raw_kernel_call_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        from repro.kernels import registry
+
+        def raw(xs, ys):
+            spec = registry.get("levenshtein")
+            return spec.batch(xs, ys)
+        """, ["accounting"])
+    assert rules == ["acct-raw-kernel-call"]
+
+
+def test_acct_counted_path_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        def counted(counter, xs, ys):
+            return counter.eval_batch(xs, ys, bucket="query")
+        """, ["accounting"])
+    assert rules == []
+
+
+def test_acct_padded_reduction_trips_and_slice_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        from repro.kernels.dispatch import pad_ragged_rows
+
+        def total(rows):
+            padded, lens = pad_ragged_rows(rows)
+            return padded.sum()
+        """, ["accounting"])
+    assert rules == ["acct-padded-slice"]
+    rules = rules_of(tmp_path, """
+        from repro.kernels.dispatch import pad_ragged_rows
+
+        def total(rows):
+            padded, lens = pad_ragged_rows(rows)
+            true = padded[: len(rows)]
+            return true.sum()
+        """, ["accounting"])
+    assert rules == []
+
+
+# -- sentinel overflow --------------------------------------------------------
+
+def test_sentinel_unclamped_arith_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        from repro.distances._wavefront import BIG
+
+        def bump(row):
+            return row + BIG
+        """, ["sentinel"])
+    assert rules == ["sentinel-unclamped-arith"]
+
+
+def test_sentinel_clamped_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        import jax.numpy as jnp
+        from repro.distances._wavefront import BIG
+
+        def bump(row):
+            return jnp.minimum(row + BIG, BIG)
+        """, ["sentinel"])
+    assert rules == []
+
+
+# -- shim discipline ----------------------------------------------------------
+
+def test_shim_missing_warn_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        class OldThing:
+            \"\"\"Deprecated; use repro.retrieval.Retriever. Removed in v0.2.\"\"\"
+
+            def __init__(self):
+                self.x = 1
+        """, ["shims"])
+    assert rules == ["shim-missing-warn"]
+
+
+def test_shim_missing_docstring_trips(tmp_path):
+    rules = rules_of(tmp_path, """
+        from repro.core._deprecation import warn_legacy
+
+        class OldThing:
+            \"\"\"Deprecated thing.\"\"\"
+
+            def __init__(self):
+                warn_legacy("OldThing")
+        """, ["shims"])
+    assert rules == ["shim-docstring"]
+
+
+def test_shim_compliant_clean(tmp_path):
+    rules = rules_of(tmp_path, """
+        from repro.core._deprecation import warn_legacy
+
+        class OldThing:
+            \"\"\"Deprecated; use repro.retrieval.Retriever instead.
+
+            This shim will be removed in v0.2.
+            \"\"\"
+
+            def __init__(self):
+                warn_legacy("OldThing")
+        """, ["shims"])
+    assert rules == []
+
+
+# -- pragma machinery ---------------------------------------------------------
+
+def test_pragma_suppresses_with_justification(tmp_path):
+    rules, _, stats = lint_source(tmp_path, """
+        def sweep(net, queries, eps):
+            # lint: allow[dispatch-in-loop] -- sequential parity reference
+            return [net.range_query(q, eps) for q in queries]
+        """, select=["dispatch"])
+    assert rules == []
+    assert stats["pragmas_used"] == 1
+    assert stats["pragmas"][0]["justification"] == \
+        "sequential parity reference"
+
+
+def test_pragma_without_justification_is_a_finding(tmp_path):
+    rules, findings, _ = lint_source(tmp_path, """
+        def sweep(net, queries, eps):
+            # lint: allow[dispatch-in-loop]
+            return [net.range_query(q, eps) for q in queries]
+        """, select=["dispatch"])
+    assert rules == [PRAGMA_RULE]
+
+
+def test_pragma_for_other_rule_does_not_suppress(tmp_path):
+    rules, _, _ = lint_source(tmp_path, """
+        def sweep(net, queries, eps):
+            # lint: allow[trace-host-branch] -- wrong rule entirely
+            return [net.range_query(q, eps) for q in queries]
+        """, select=["dispatch"])
+    assert rules == ["dispatch-in-loop"]
+
+
+def test_unknown_pass_selection_raises(tmp_path):
+    (tmp_path / "m.py").write_text("x = 1\n")
+    with pytest.raises(KeyError):
+        analysis.run(tmp_path, select=["nope"])
+
+
+# -- end to end: the tree ships clean -----------------------------------------
+
+def test_src_repro_is_clean():
+    findings, stats = analysis.run(REPO / "src" / "repro")
+    assert findings == [], "\n" + "\n".join(f.format() for f in findings)
+    assert stats["pragmas_used"] <= 10, stats["pragmas"]
+    for p in stats["pragmas"]:
+        assert p["justification"], p
+
+
+def test_cli_exits_clean():
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint.py"),
+         "--root", str(REPO / "src" / "repro"), "--format=json"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+    payload = json.loads(proc.stdout)
+    assert payload["clean"] is True
+    assert set(payload["stats"]["passes"]) == set(analysis.pass_names())
