@@ -1,0 +1,172 @@
+"""Continuous-batching serve benchmark — the PR-9 serving-layer gate.
+
+Three properties of the serve engine are asserted here and gated
+count-strict in CI (``BENCH_serve.json``):
+
+* **Shared rounds are real** — under open-loop Poisson load at a fixed
+  arrival rate, the continuous-batching engine's mean merged-dispatch
+  count per query (total merged rounds / requests served) is STRICTLY
+  below the one-query-at-a-time loop's: overlapping requests ride the
+  same packed dispatches instead of paying their own round sequence.
+  ``dispatches`` gates both sides.
+* **Exactness under load** — every request's hit set is identical to the
+  sequential host-loop oracle (``exact_hits`` gates the total; any drift
+  — missed or spurious — fails the compare).
+* **Zero-downtime resize** — a mid-load ``resize()`` through the
+  snapshot-swap path (snapshot -> restore clone -> reshard clone -> swap
+  at a round boundary) completes with ZERO failed/mismatched requests,
+  asserted per request against the same oracle.
+
+Determinism: arrivals come from a seeded Poisson schedule and serving
+runs on the virtual clock (``run_schedule``, fixed ``round_cost``), so
+admission patterns, dispatch counts, hit totals — and even the latency
+percentiles in virtual-time units — are identical every run.  The
+percentile columns (p50/p95/p99) and ``us_per_call`` are reported for
+trajectory only (warn-only, like all timings); the gates are the count
+and exactness keys.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import mutate_queries, row
+from repro.data import synthetic
+from repro.retrieval import RetrievalConfig, Retriever
+from repro.serve import FleetSnapshotManager, ServeConfig, ServeEngine, \
+    poisson_schedule
+
+N_SHARDS = 4
+EPS = 2.0
+QPS = 1.0          # arrivals per round_cost unit: ~frontier-depth overlap
+N_QUERIES = 16
+
+
+def _build(data, workers):
+    r = Retriever.build(
+        RetrievalConfig("levenshtein", execution="fleet", workers=workers,
+                        tight_bounds=True), data)
+    return r, r.elastic().index
+
+
+def run(full: bool = False):
+    out = []
+    n = 2400 if full else 600
+    data = synthetic.proteins(n, seed=0)
+    workers = [f"w{i}" for i in range(N_SHARDS)]
+    r, fleet = _build(data, workers)
+    qs = mutate_queries(data, N_QUERIES, seed=3)
+    arrivals = poisson_schedule(QPS, N_QUERIES / QPS, seed=7)[:N_QUERIES]
+    while len(arrivals) < N_QUERIES:   # top up a short pathological draw
+        arrivals = np.concatenate([arrivals, arrivals[-1:] + 1.0])
+
+    # sequential host-loop oracle (ONE facade call; the exactness anchor)
+    oracle = r.batch(qs).via("host").range(EPS).hits
+    total_hits = sum(len(h) for h in oracle)
+
+    # -- one-query-at-a-time baseline: fresh rounds-mode run per query ----
+    # (each query pays its whole round sequence alone: dispatches/query =
+    # its frontier depth)
+    r0 = fleet.device_stats["rounds"]
+    t0 = time.perf_counter()
+    seq_hits = [fleet.range_query_batch([q], EPS)[0] for q in qs]
+    t_seq = (time.perf_counter() - t0) * 1e6 / N_QUERIES
+    seq_rounds = fleet.device_stats["rounds"] - r0
+    assert seq_hits == oracle, "sequential rounds serving drifted"
+    out.append(row(
+        f"serve_sequential_{N_SHARDS}shards", t_seq,
+        dispatches=seq_rounds,
+        per_query=round(seq_rounds / N_QUERIES, 3),
+        exact_hits=total_hits,
+    ))
+
+    # -- continuous batching under Poisson load (virtual clock) -----------
+    eng = ServeEngine(fleet, ServeConfig(eps=EPS, max_inflight=32))
+    t0 = time.perf_counter()
+    reqs = eng.run_schedule(qs, arrivals)
+    t_cont = (time.perf_counter() - t0) * 1e6 / N_QUERIES
+    assert [rq.hits for rq in reqs] == oracle, \
+        "continuous batching drifted from the sequential oracle"
+    cont_rounds = eng.engine_stats()["rounds"]
+    assert cont_rounds / N_QUERIES < seq_rounds / N_QUERIES, (
+        f"shared rounds are not real: continuous spent {cont_rounds} "
+        f"merged dispatches for {N_QUERIES} queries vs {seq_rounds} "
+        "sequentially")
+    lat = eng.latency_stats()
+    out.append(row(
+        f"serve_continuous_{N_SHARDS}shards", t_cont,
+        dispatches=cont_rounds,
+        per_query=round(cont_rounds / N_QUERIES, 3),
+        rounds=sum(rq.rounds for rq in reqs),
+        exact_hits=sum(len(rq.hits) for rq in reqs),
+        p50=round(lat["p50"], 3), p95=round(lat["p95"], 3),
+        p99=round(lat["p99"], 3),
+    ))
+
+    # -- greedy admission: newcomers get a dedicated first round ----------
+    _, fleet_g = _build(data, workers)
+    eng_g = ServeEngine(fleet_g, ServeConfig(eps=EPS, max_inflight=32,
+                                             admission="greedy"))
+    t0 = time.perf_counter()
+    reqs_g = eng_g.run_schedule(qs, arrivals)
+    t_greedy = (time.perf_counter() - t0) * 1e6 / N_QUERIES
+    assert [rq.hits for rq in reqs_g] == oracle, "greedy admission drifted"
+    greedy_rounds = eng_g.engine_stats()["rounds"]
+    assert greedy_rounds >= cont_rounds, \
+        "greedy admission cannot spend fewer rounds than tick"
+    lat_g = eng_g.latency_stats()
+    out.append(row(
+        f"serve_greedy_{N_SHARDS}shards", t_greedy,
+        dispatches=greedy_rounds,
+        exact_hits=sum(len(rq.hits) for rq in reqs_g),
+        p50=round(lat_g["p50"], 3), p99=round(lat_g["p99"], 3),
+    ))
+
+    # -- snapshot round trip: atomic save + zero-eval restore -------------
+    with tempfile.TemporaryDirectory() as d:
+        snap = FleetSnapshotManager(d)
+        t0 = time.perf_counter()
+        step = snap.save(fleet, block=True)
+        clone = snap.restore(step)
+        t_snap = (time.perf_counter() - t0) * 1e6
+        size_mb = sum(f.stat().st_size for f in
+                      pathlib.Path(d).rglob("*") if f.is_file()) / 2**20
+    assert clone.eval_count() == fleet.eval_count(), \
+        "snapshot restore must not spend evaluations"
+    assert clone.range_query_batch(list(qs), EPS) == oracle, \
+        "restored fleet drifted from the oracle"
+    out.append(row(
+        f"serve_snapshot_{N_SHARDS}shards", t_snap,
+        size_mb=round(size_mb, 2),
+        exact_hits=total_hits,
+    ))
+
+    # -- zero-downtime mid-load resize through the snapshot swap ----------
+    _, fleet_s = _build(data, workers)
+    with tempfile.TemporaryDirectory() as d:
+        eng_s = ServeEngine(fleet_s, ServeConfig(eps=EPS, max_inflight=32,
+                                                 snapshot_dir=d))
+        t0 = time.perf_counter()
+        reqs_s = eng_s.run_schedule(
+            qs, arrivals, resize_at=float(arrivals[N_QUERIES // 2]),
+            resize_to=workers + [f"w{N_SHARDS}"])
+        t_swap = (time.perf_counter() - t0) * 1e6 / N_QUERIES
+    failed = [i for i, rq in enumerate(reqs_s) if not rq.done]
+    mismatched = [i for i, rq in enumerate(reqs_s) if rq.hits != oracle[i]]
+    assert not failed and not mismatched, (
+        f"mid-load snapshot-swap resize broke serving: "
+        f"failed={failed} mismatched={mismatched}")
+    assert eng_s.swaps == 1, "the resize never swapped in"
+    assert len(eng_s.fleet.workers) == N_SHARDS + 1
+    out.append(row(
+        f"serve_swap_{N_SHARDS}to{N_SHARDS + 1}", t_swap,
+        dispatches=eng_s.engine_stats()["rounds"],
+        exact_hits=sum(len(rq.hits) for rq in reqs_s),
+        mismatches=len(failed) + len(mismatched),
+        swaps=eng_s.swaps,
+    ))
+    return out

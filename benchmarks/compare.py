@@ -33,10 +33,12 @@ COUNT_KEYS = ("evals_frac", "dispatches", "build_evals", "build_dispatches",
               "lb_evals", "rounds", "traces", "list_entries",
               "entries_per_obj", "avg_parents", "max_parents", "size_mb")
 
-#: exactness metrics (hit-set fractions from the fig-12 matching curves):
-#: deterministic for fixed seeds and gated on ANY change — a decrease is
-#: missed hits, an increase is spurious hits
-EXACT_KEYS = ("uniq_frac", "consec_frac")
+#: exactness metrics (hit-set fractions from the fig-12 matching curves,
+#: plus serve-engine hit totals vs the host-loop oracle): deterministic
+#: for fixed seeds and gated on ANY change — a decrease is missed hits,
+#: an increase is spurious hits
+EXACT_KEYS = ("uniq_frac", "consec_frac", "exact_hits", "mismatches",
+              "swaps")
 
 
 def _rows_by_name(rows):

@@ -26,6 +26,7 @@ MODULES = [
     ("elastic", "benchmarks.bench_elastic"),       # fleet serving + resize
     ("kernels", "benchmarks.bench_kernels"),       # kernel registry + packing
     ("bounds", "benchmarks.bench_bounds"),         # tiered LB cascade
+    ("serve", "benchmarks.bench_serve"),           # continuous batching
 ]
 
 

@@ -36,9 +36,11 @@ DISPATCH_NAMES = {"batch", "device_call", "packed_batch", "packed_envelope",
                   "eval_stacked", "range_query"}
 
 #: modules allowed to drive dispatch from loops: the batch engine IS the
-#: loop the substrate sanctions (one packed dispatch per merged round), and
-#: the counter owns the backend call under it
-ENGINE_DRIVERS = ("core/batch_engine.py", "core/counter.py")
+#: loop the substrate sanctions (one packed dispatch per merged round), the
+#: counter owns the backend call under it, and the serve engine's tick loop
+#: drives the batch engine (one shared round per tick)
+ENGINE_DRIVERS = ("core/batch_engine.py", "core/counter.py",
+                  "serve/engine.py")
 
 
 @register("dispatch")

@@ -62,7 +62,7 @@ dispatches per round, not per shard per query per round.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Generator, List, Optional, Sequence
+from typing import Dict, Generator, List, Optional, Sequence, Set
 
 import numpy as np
 
@@ -255,12 +255,26 @@ class ShardPlans:
     per plan with ``q_lens`` giving the actual lengths (ragged batches share
     one padded width across the whole fleet).  ``shard`` is the provenance
     id (the fleet worker slot) that rides every evaluated row into the
-    packed dispatcher's per-shard accounting."""
+    packed dispatcher's per-shard accounting.  ``lb`` optionally overrides
+    the engine-wide envelope hook for this group's rows — the serve layer
+    uses it so requests admitted before and after a fleet swap each screen
+    against the envelopes of the fleet that admitted them."""
     shard: int
     data: np.ndarray                # (rows, l[, d]) shard-local windows
     plans: Sequence[Plan]
     queries: np.ndarray             # (n_plans, W[, d]) padded query rows
     q_lens: np.ndarray              # (n_plans,) actual query lengths
+    lb: Optional[object] = None     # per-group envelope hook (else engine's)
+
+
+@dataclasses.dataclass
+class _Admitted:
+    """One admitted batch of a cross-shard run: its groups, its ε, and the
+    per-group/per-plan result slots still being filled."""
+    groups: List[ShardPlans]
+    eps: float
+    results: List[List[Optional[List[int]]]]
+    live: int = 0                   # plans not yet run to StopIteration
 
 
 class FleetBatchEngine:
@@ -273,10 +287,21 @@ class FleetBatchEngine:
     workers' plans that were never admitted, simply contribute no rows),
     gathers candidate windows from each plan's own shard, and issues ONE
     ``evaluate`` call spanning all shards and all length buckets.  On a
-    fused backend, VERDICT rows carry the query ε (pruned candidates never
-    have distances materialized — the kernel returns verdict-masked
+    fused backend, VERDICT rows carry their batch's ε (pruned candidates
+    never have distances materialized — the kernel returns verdict-masked
     sentinels), EXACT rows opt out via ``+inf``, exactly as in
     :class:`BatchEngine`.
+
+    The engine is **incremental**: :meth:`admit` joins a batch of plans
+    (its own ε, its own shard groups) to the shared cadence at the next
+    round boundary, :meth:`step` advances every in-flight plan by ONE
+    merged round, and finished batches retire their rows immediately —
+    this is the substrate of the continuous-batching serve layer
+    (``repro/serve/engine.py``), where requests from different callers
+    arrive asynchronously and still share packed dispatches.
+    :meth:`run` (admit once, step until drained) preserves the historical
+    one-shot contract bit for bit: with a single admitted batch the merged
+    row order, frontier sequence, and evaluation counts are identical.
 
     Evaluation accounting is the caller's: the engine tallies
     ``exact_evals`` / ``verdict_evals`` (requested rows only — backend
@@ -305,92 +330,158 @@ class FleetBatchEngine:
         self.lb_rows = 0
         self.lb_pruned = 0
         self.shard_rows: Dict[int, int] = {}
+        self._next_bid = 0
+        self._admitted: Dict[int, _Admitted] = {}
+        self._state: Dict[tuple, Frontier] = {}   # (bid, g, i) -> frontier
+
+    # -- incremental API (continuous batching) ------------------------------
+
+    def admit(self, groups: Sequence[ShardPlans], eps: float) -> int:
+        """Join a batch of plans to the shared cadence; returns its id.
+
+        Plans are primed here (their first frontier is produced), so the
+        batch's round-1 rows merge into the very next :meth:`step` — new
+        requests join at the round boundary, no drain/restart."""
+        bid = self._next_bid
+        self._next_bid += 1
+        batch = _Admitted(list(groups), float(eps),
+                          [[None] * len(g.plans) for g in groups])
+        self._admitted[bid] = batch
+        for g, grp in enumerate(batch.groups):
+            for i, p in enumerate(grp.plans):
+                try:
+                    self._state[(bid, g, i)] = next(p)
+                    batch.live += 1
+                except StopIteration as stop:
+                    batch.results[g][i] = stop.value \
+                        if stop.value is not None else []
+        return bid
+
+    @property
+    def active(self) -> bool:
+        """True while any admitted plan still has frontiers to evaluate."""
+        return bool(self._state)
+
+    def batches_in_flight(self) -> Set[int]:
+        """Batch ids that would contribute rows to the next round."""
+        return {k[0] for k in self._state}
+
+    def is_finished(self, bid: int) -> bool:
+        return bid in self._admitted and self._admitted[bid].live == 0
+
+    def results(self, bid: int) -> List[List[List[int]]]:
+        """Pop a finished batch's per-group, per-plan results."""
+        batch = self._admitted[bid]
+        if batch.live:
+            raise ValueError(f"batch {bid} still has {batch.live} live plans")
+        del self._admitted[bid]
+        return batch.results  # type: ignore[return-value]
+
+    def step(self, only: Optional[Set[int]] = None) -> List[int]:
+        """Advance every in-flight plan (or the ``only`` batch subset) by
+        ONE merged round — one evaluator call across all batches, shards,
+        and length buckets.  Returns the batch ids that finished."""
+        keys = [k for k in sorted(self._state)
+                if only is None or k[0] in only]
+        if not keys:
+            return []
+
+        def _widen(parts):
+            # batches admitted at different times pad their query rows
+            # independently; harmonize widths before the concat (no-op —
+            # and bit-identical — when one batch is in flight, i.e. run())
+            W = max(p.shape[1] for p in parts)
+            return [p if p.shape[1] == W else
+                    np.pad(p, ((0, 0), (0, W - p.shape[1]))
+                           + ((0, 0),) * (p.ndim - 2)) for p in parts]
+
+        sizes = [self._state[k].idxs.size for k in keys]
+        xs_parts, ys_parts, lx_parts, ly_parts = [], [], [], []
+        shard_parts, verdict_parts = [], []
+        part_keep, part_lb = [], []  # per-part cascade masks / bounds
+        eps_parts = []               # per-row ε (each batch carries its own)
+        for k, m in zip(keys, sizes):
+            bid, g, i = k
+            batch = self._admitted[bid]
+            grp = batch.groups[g]
+            fr = self._state[k]
+            keep = np.ones(m, bool)
+            lbv = None
+            hook = grp.lb if grp.lb is not None else self.lb
+            if hook is not None and fr.kind == VERDICT and m:
+                # envelope tier over the shard's precomputed per-window
+                # envelopes: pruned rows answer with the bound below
+                # and never enter the merged evaluate call
+                lbv = np.asarray(
+                    hook(grp.shard, fr.idxs, grp.queries[i],
+                         int(grp.q_lens[i])), np.float32)
+                keep = lbv <= batch.eps
+                self.lb_rows += m
+                self.lb_pruned += int(m - keep.sum())
+            part_keep.append(keep)
+            part_lb.append(lbv)
+            mk = int(keep.sum())
+            xs_parts.append(np.repeat(grp.queries[i][None], mk, 0))
+            ys_parts.append(grp.data[fr.idxs[keep]])
+            lx_parts.append(np.full(mk, int(grp.q_lens[i]), np.int64))
+            ly_parts.append(np.full(mk, grp.data.shape[1], np.int64))
+            shard_parts.append(np.full(mk, grp.shard, np.int64))
+            verdict_parts.append(np.full(mk, fr.kind == VERDICT))
+            eps_parts.append(np.full(
+                mk, batch.eps if fr.kind == VERDICT else np.inf, np.float32))
+            self.shard_rows[grp.shard] = \
+                self.shard_rows.get(grp.shard, 0) + mk
+        xs = np.concatenate(_widen(xs_parts))
+        ys = np.concatenate(_widen(ys_parts))
+        lx = np.concatenate(lx_parts)
+        ly = np.concatenate(ly_parts)
+        shard_ids = np.concatenate(shard_parts)
+        verdict = np.concatenate(verdict_parts)
+
+        if len(xs):
+            eps_rows = np.concatenate(eps_parts) if self.fused else None
+            ds, n_pruned = self.evaluate(xs, ys, lx, ly, eps_rows,
+                                         shard_ids)
+            ds = np.asarray(ds, np.float32)
+        else:  # every row of the round was envelope-pruned
+            ds, n_pruned = np.zeros(0, np.float32), 0
+        self.rounds += 1
+        self.exact_evals += int((~verdict).sum())
+        self.verdict_evals += int(verdict.sum())
+        self.fused_pruned += int(n_pruned)
+
+        finished: List[int] = []
+        off = 0
+        for k, m, keep, lbv in zip(keys, sizes, part_keep, part_lb):
+            bid, g, i = k
+            batch = self._admitted[bid]
+            mk = int(keep.sum())
+            out = np.empty(m, np.float32)
+            if lbv is not None:
+                out[~keep] = lbv[~keep]
+            out[keep] = ds[off:off + mk]
+            try:
+                self._state[k] = batch.groups[g].plans[i].send(out)
+            except StopIteration as stop:
+                del self._state[k]
+                batch.results[g][i] = stop.value \
+                    if stop.value is not None else []
+                batch.live -= 1
+                if batch.live == 0:
+                    finished.append(bid)
+            off += mk
+        return finished
+
+    # -- one-shot contract (admit once, drain) ------------------------------
 
     def run(self, groups: Sequence[ShardPlans], eps: float
             ) -> List[List[List[int]]]:
-        """Drive every group's plans in lockstep; returns per-group,
-        per-plan results (shard-local hit lists, same order as ``plans``)."""
-        results: List[List[Optional[List[int]]]] = [
-            [None] * len(g.plans) for g in groups]
-
-        state = {}
-        for g, grp in enumerate(groups):
-            for i, p in enumerate(grp.plans):
-                try:
-                    state[(g, i)] = next(p)
-                except StopIteration as stop:
-                    results[g][i] = stop.value if stop.value is not None \
-                        else []
-
-        while state:
-            order = sorted(state)
-            sizes = [state[k].idxs.size for k in order]
-            xs_parts, ys_parts, lx_parts, ly_parts = [], [], [], []
-            shard_parts, verdict_parts = [], []
-            part_keep, part_lb = [], []  # per-part cascade masks / bounds
-            for k, m in zip(order, sizes):
-                g, i = k
-                grp = groups[g]
-                fr = state[k]
-                keep = np.ones(m, bool)
-                lbv = None
-                if self.lb is not None and fr.kind == VERDICT and m:
-                    # envelope tier over the shard's precomputed per-window
-                    # envelopes: pruned rows answer with the bound below
-                    # and never enter the merged evaluate call
-                    lbv = np.asarray(
-                        self.lb(grp.shard, fr.idxs, grp.queries[i],
-                                int(grp.q_lens[i])), np.float32)
-                    keep = lbv <= eps
-                    self.lb_rows += m
-                    self.lb_pruned += int(m - keep.sum())
-                part_keep.append(keep)
-                part_lb.append(lbv)
-                mk = int(keep.sum())
-                xs_parts.append(np.repeat(grp.queries[i][None], mk, 0))
-                ys_parts.append(grp.data[fr.idxs[keep]])
-                lx_parts.append(np.full(mk, int(grp.q_lens[i]), np.int64))
-                ly_parts.append(np.full(mk, grp.data.shape[1], np.int64))
-                shard_parts.append(np.full(mk, grp.shard, np.int64))
-                verdict_parts.append(np.full(mk, fr.kind == VERDICT))
-                self.shard_rows[grp.shard] = \
-                    self.shard_rows.get(grp.shard, 0) + mk
-            xs = np.concatenate(xs_parts)
-            ys = np.concatenate(ys_parts)
-            lx = np.concatenate(lx_parts)
-            ly = np.concatenate(ly_parts)
-            shard_ids = np.concatenate(shard_parts)
-            verdict = np.concatenate(verdict_parts)
-
-            if len(xs):
-                eps_rows = None
-                if self.fused:
-                    eps_rows = np.where(verdict, np.float32(eps),
-                                        np.float32(np.inf))
-                ds, n_pruned = self.evaluate(xs, ys, lx, ly, eps_rows,
-                                             shard_ids)
-                ds = np.asarray(ds, np.float32)
-            else:  # every row of the round was envelope-pruned
-                ds, n_pruned = np.zeros(0, np.float32), 0
-            self.rounds += 1
-            self.exact_evals += int((~verdict).sum())
-            self.verdict_evals += int(verdict.sum())
-            self.fused_pruned += int(n_pruned)
-
-            new_state = {}
-            off = 0
-            for k, m, keep, lbv in zip(order, sizes, part_keep, part_lb):
-                g, i = k
-                mk = int(keep.sum())
-                out = np.empty(m, np.float32)
-                if lbv is not None:
-                    out[~keep] = lbv[~keep]
-                out[keep] = ds[off:off + mk]
-                try:
-                    new_state[k] = groups[g].plans[i].send(out)
-                except StopIteration as stop:
-                    results[g][i] = stop.value if stop.value is not None \
-                        else []
-                off += mk
-            state = new_state
-        return results  # type: ignore[return-value]
+        """Drive every group's plans in lockstep to completion; returns
+        per-group, per-plan results (shard-local hit lists, same order as
+        ``plans``).  Equivalent to ``admit`` + ``step`` until drained —
+        with one batch the merged rounds are identical to the historical
+        one-shot engine, row for row."""
+        bid = self.admit(groups, eps)
+        while self._state:
+            self.step()
+        return self.results(bid)

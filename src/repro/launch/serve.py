@@ -1,21 +1,27 @@
-"""Retrieval serving driver — the paper's kind of serving: a sharded
-subsequence-retrieval fleet answering batched queries.
+"""Continuous-batching serve CLI — the front end of the PR-9 serve engine.
 
   PYTHONPATH=src python -m repro.launch.serve --dataset proteins \
-      --n-windows 2000 --shards 4 --queries 32 --eps 2.0
+      --n-windows 2000 --shards 4 --queries 32 --eps 2.0 --qps 16
 
   # or declaratively: the whole retrieval stack from one JSON config
-  PYTHONPATH=src python -m repro.launch.serve --config fleet.json
+  PYTHONPATH=src python -m repro.launch.serve --config fleet.json \
+      --qps 16 --duration 2.0 --snapshot-dir /tmp/fleet-snaps
 
 ``--config path.json`` deserializes straight into
 :class:`~repro.retrieval.RetrievalConfig` (the file is exactly
-``RetrievalConfig.to_json()`` output) and replaces the ad-hoc retrieval
-flags (``--distance`` / ``--shards``); dataset and query-load flags stay.
-The driver builds the fleet through the :class:`~repro.retrieval.Retriever`
-facade, answers a batch of range queries on the stacked device path,
-cross-checks the host per-shard loop, exercises dead-worker masking with a
-replica work-steal, and resizes the fleet down one worker — printing
-latency, pruning, and ``{query, build}`` accounting as JSON.
+``RetrievalConfig.to_json()`` output).  The driver builds the fleet
+through the :class:`~repro.retrieval.Retriever` facade, then serves an
+open-loop Poisson request stream through the continuous-batching
+:class:`~repro.serve.engine.ServeEngine`: asynchronous requests join the
+shared frontier cadence mid-flight (one packed dispatch per merged
+round), a mid-load ``resize()`` runs through the zero-downtime
+snapshot-swap path, and every answer is cross-checked against the host
+per-shard oracle loop.  Latency lands as p50/p95/p99 percentiles.
+
+Timing methodology: an UNTIMED warmup batch runs first, so the timed
+section measures warm serving — first-call trace/compile never pollutes
+the reported qps (``traces_timed`` in the output counts kernel traces
+inside the timed window; warm serving keeps it at zero).
 """
 
 from __future__ import annotations
@@ -27,9 +33,10 @@ import time
 
 import numpy as np
 
-from repro.core.batch_engine import BatchEngine
 from repro.data import synthetic
+from repro.kernels import registry as kernel_registry
 from repro.retrieval import RetrievalConfig, Retriever
+from repro.serve import OpenLoopLoadGen
 
 
 def build_config(args) -> RetrievalConfig:
@@ -51,6 +58,18 @@ def build_config(args) -> RetrievalConfig:
         tight_bounds=True)
 
 
+def make_queries(data: np.ndarray, n: int, rng) -> np.ndarray:
+    """Database rows perturbed into near-miss queries."""
+    queries = data[rng.integers(0, len(data), n)].copy()
+    if data.dtype.kind == "i":
+        flips = rng.random(queries.shape) < 0.1
+        queries[flips] = rng.integers(0, queries.max() + 1, flips.sum())
+    else:
+        queries += rng.normal(scale=0.1, size=queries.shape).astype(
+            queries.dtype)
+    return queries
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default=None,
@@ -61,11 +80,24 @@ def main():
     ap.add_argument("--distance", default=None)
     ap.add_argument("--n-windows", type=int, default=2000)
     ap.add_argument("--shards", type=int, default=4)
-    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=32,
+                    help="distinct query windows (cycled if --duration "
+                         "asks for more requests)")
     ap.add_argument("--eps", type=float, default=2.0)
+    ap.add_argument("--qps", type=float, default=8.0,
+                    help="open-loop Poisson arrival rate")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="seconds of load (default: queries/qps)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="fleet snapshot directory (default: a temp dir)")
+    ap.add_argument("--resize-to", type=int, default=-1,
+                    help="mid-load zero-downtime resize to this many "
+                         "workers (-1 = one fewer than built; 0 = skip)")
     args = ap.parse_args()
 
     config = build_config(args)
+    if args.snapshot_dir:
+        config = config.replace(serve_snapshot_dir=args.snapshot_dir)
     gen, _ = synthetic.DATASETS[args.dataset]
     data = gen(args.n_windows, seed=0)
     rng = np.random.default_rng(1)
@@ -75,76 +107,78 @@ def main():
     build_s = time.time() - t0
     workers = fleet.elastic().workers
 
-    queries = data[rng.integers(0, len(data), args.queries)].copy()
-    if data.dtype.kind == "i":
-        flips = rng.random(queries.shape) < 0.1
-        queries[flips] = rng.integers(0, queries.max() + 1, flips.sum())
-    else:
-        queries += rng.normal(scale=0.1, size=queries.shape).astype(
-            queries.dtype)
+    queries = make_queries(data, args.queries, rng)
+    n_requests = len(queries) if args.duration is None \
+        else max(1, int(args.qps * args.duration))
+    qlist = [queries[i % len(queries)] for i in range(n_requests)]
 
-    # stacked device serving: the whole query batch is ONE fleet query
-    # (merge_flats + one device dispatch per length bucket)
+    # oracle BEFORE serving: the host per-shard loop in ONE facade batch
+    # call (hit sets are shard-layout-invariant, so it stays valid across
+    # the mid-load resize below)
+    oracle = fleet.batch(queries).via("host").range(args.eps).hits
+
+    # UNTIMED warmup: compile/trace every kernel shape the serve path hits,
+    # so the timed section below measures warm serving only
+    fleet.batch(queries[:2]).range(args.eps)
+    traces0 = kernel_registry.STATS["traces"]
+
+    engine = fleet.serve(args.eps).start()
+    load = OpenLoopLoadGen(engine, qlist, args.qps, eps=args.eps).start()
     t0 = time.time()
-    batch_hits = fleet.batch(queries).range(args.eps)
+    resize_to = (len(workers) - 1 if args.resize_to == -1
+                 else args.resize_to)
+    did_resize = False
+    if resize_to and resize_to != len(workers):
+        # mid-load: snapshot -> reshard a clone off-path -> swap at a
+        # round boundary; the stream keeps serving throughout
+        time.sleep(0.5 / args.qps)
+        new_workers = (workers[:resize_to] if resize_to < len(workers)
+                       else workers + [f"w{i}" for i in
+                                       range(resize_to - len(workers))])
+        engine.resize(new_workers, block=False)
+        did_resize = True
+    reqs = load.join()
+    if did_resize:
+        deadline = time.time() + 60
+        while engine.swaps == 0 and time.time() < deadline:
+            time.sleep(1e-3)
+    engine.close(drain=True)
     serve_s = time.time() - t0
-    n_hits = sum(len(h) for h in batch_hits)
+    traces_timed = kernel_registry.STATS["traces"] - traces0
 
-    # host per-shard loop: same hits, classic per-eval counting (the
-    # paper's pruning-ratio currency lives in the counter's query bucket)
-    t0 = time.time()
-    loop_hits = fleet.batch(queries).via("host").range(args.eps)
-    loop_s = time.time() - t0
-    assert batch_hits.hits == loop_hits.hits, "stacked serving must stay exact"
+    mismatched = [i for i, r in enumerate(reqs)
+                  if not r.done or r.hits != oracle[i % len(queries)]]
+    assert not mismatched, f"serving drifted from oracle: {mismatched}"
+    if did_resize:
+        assert engine.swaps == 1, "snapshot-swap resize did not complete"
+        post = [engine.submit(q) for q in queries]
+        engine.start()
+        engine.close(drain=True)
+        assert [r.result() for r in post] == oracle, \
+            "post-swap serving must stay exact"
+
+    lat = engine.latency_stats()
+    stats = engine.engine_stats()
     evals = fleet.eval_stats()
-    naive = args.queries * len(data)
-
-    # straggler mitigation: shard 0 is slow -> it is masked `dead` in the
-    # stacked fleet query and its share re-issued against a replica
-    replica = Retriever.build(config, data)
-    t0 = time.time()
-    part_hits = fleet.batch(queries).dead(workers[0]).range(args.eps)
-    rep = replica.elastic().index.shards[workers[0]]
-    if rep:
-        # the replica answers the dead shard's share as ONE engine batch
-        # (all stolen queries share a merged frontier round)
-        stolen = BatchEngine(rep.net.counter).run(
-            [rep.net.range_query_plan(args.eps) for _ in queries],
-            list(queries), args.eps)
-        extras = [[int(rep.gids[i]) for i in local] for local in stolen]
-    else:
-        extras = [[] for _ in queries]
-    stolen_hits = sum(len(set(part) | set(extra))
-                      for part, extra in zip(part_hits, extras))
-    steal_s = time.time() - t0
-    assert stolen_hits == n_hits, "work stealing must preserve exactness"
-
-    # elastic resize: drop one worker, verify exactness is preserved and
-    # the incremental reshard cost lands in the build bucket
-    build_before = fleet.eval_stats()["build"]
-    frac = fleet.elastic().resize(workers[:-1])
-    resize_evals = fleet.eval_stats()["build"] - build_before
-    n_hits2 = sum(len(h) for h in fleet.batch(queries).range(args.eps))
-    assert n_hits2 == n_hits, "resharding must preserve exactness"
-
     print(json.dumps({
         "dataset": args.dataset, "distance": config.dist.name,
         "config": config.to_dict(),
         "windows": len(data), "shards": len(workers),
         "build_s": round(build_s, 2),
-        "batch_queries": args.queries,
+        "requests": len(reqs),
         "serve_s": round(serve_s, 3),
-        "qps": round(args.queries / serve_s, 1),
-        "loop_s": round(loop_s, 3),
-        "loop_qps": round(args.queries / loop_s, 1),
-        "hits": n_hits,
+        "warm_qps": round(len(reqs) / serve_s, 1),
+        "traces_timed": traces_timed,
+        "merged_rounds": stats["rounds"],
+        "mean_rounds_per_request": lat.get("mean_rounds"),
+        "swaps": stats["swaps"],
+        "latency_p50_ms": round(1e3 * lat["p50"], 2),
+        "latency_p95_ms": round(1e3 * lat["p95"], 2),
+        "latency_p99_ms": round(1e3 * lat["p99"], 2),
+        "queue_p50_ms": round(1e3 * lat.get("queue_p50", 0.0), 2),
+        "hits": sum(len(r.hits) for r in reqs),
         "query_evals": evals["query"],
         "build_evals": evals["build"],
-        "device_evals": fleet.elastic().device_stats["total_evals"],
-        "evals_vs_naive": round(evals["query"] / naive, 4),
-        "steal_s": round(steal_s, 3),
-        "resize_moved_frac": round(frac, 3),
-        "resize_build_evals": resize_evals,
     }, indent=2))
 
 

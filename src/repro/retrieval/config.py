@@ -45,6 +45,13 @@ bulk_build     build hierarchies through the PR-2 cohort loader (default);
                ``False`` = sequential Alg.-1 inserts (legacy counts)
 max_cohort     cohort size cap for the bulk loader / fleet shard builds
 interpret      run Pallas kernels in interpret mode (off-TPU)
+serve_*        continuous-batching serve engine (``Retriever.serve()``,
+               PR 9): ``serve_max_inflight`` caps concurrently in-flight
+               requests, ``serve_admission`` picks the admission policy
+               (``tick`` = newcomers merge into the next shared round,
+               ``greedy`` = one dedicated first round), and
+               ``serve_snapshot_dir`` hosts the zero-downtime
+               snapshot/restore checkpoints (default: a fresh temp dir)
 =============  =============================================================
 
 ``to_json`` / ``from_json`` round-trip the config so serving configs are
@@ -83,6 +90,9 @@ class RetrievalConfig:
     bulk_build: bool = True
     max_cohort: int = 256
     interpret: bool = True
+    serve_max_inflight: int = 32
+    serve_admission: str = "tick"
+    serve_snapshot_dir: Optional[str] = None
 
     # -- validation (the whole point: fail at construction, not mid-query) --
 
@@ -163,6 +173,19 @@ class RetrievalConfig:
                 raise ValueError(
                     f"fleet_mode only applies to fleet execution "
                     f"(execution={self.execution!r})")
+
+        # serve knobs (Retriever.serve(); validated here regardless of
+        # execution so a bad serving config fails at construction, not when
+        # the engine is finally asked for)
+        from repro.serve.engine import ADMISSION_POLICIES
+        if self.serve_max_inflight < 1:
+            raise ValueError(
+                f"serve_max_inflight must be >= 1; "
+                f"got {self.serve_max_inflight}")
+        if self.serve_admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"serve_admission must be one of {ADMISSION_POLICIES}; "
+                f"got {self.serve_admission!r}")
 
     # -- resolution helpers --------------------------------------------------
 

@@ -399,6 +399,23 @@ class Retriever:
                 f"(this retriever runs {self.config.execution!r})")
         return ElasticHandle(self._engine)
 
+    def serve(self, eps: float = 1.0):
+        """A continuous-batching :class:`~repro.serve.engine.ServeEngine`
+        over this retriever's fleet (PR 9): asynchronous requests join the
+        shared frontier cadence mid-flight, one packed dispatch per merged
+        round, zero-downtime snapshot-swap ``resize()``.  Configured by the
+        ``serve_*`` config fields; fleet-only."""
+        if self._mode != "fleet":
+            raise ValueError(
+                "serve() requires execution='fleet' "
+                f"(this retriever runs {self.config.execution!r})")
+        from repro.serve.engine import ServeConfig, ServeEngine
+        cfg = self.config
+        return ServeEngine(self._engine.fleet, ServeConfig(
+            eps=eps, max_inflight=cfg.serve_max_inflight,
+            admission=cfg.serve_admission,
+            snapshot_dir=cfg.serve_snapshot_dir))
+
     # -- introspection -------------------------------------------------------
 
     @property

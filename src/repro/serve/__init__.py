@@ -1,0 +1,24 @@
+"""Continuous-batching retrieval serving (PR 9).
+
+The serve layer turns the round-based fleet substrate into a front end
+for asynchronous traffic: requests admitted mid-flight join the shared
+frontier cadence at the next round boundary, every in-flight request's
+next round merges into ONE packed device dispatch per tick, and a live
+fleet snapshots/restores so ``resize()`` swaps reshards in with zero
+downtime.  See ``docs/architecture.md`` ("Serving layer").
+"""
+
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.loadgen import OpenLoopLoadGen, poisson_schedule
+from repro.serve.queue import Request, RequestQueue
+from repro.serve.snapshot import FleetSnapshotManager
+
+__all__ = [
+    "FleetSnapshotManager",
+    "OpenLoopLoadGen",
+    "Request",
+    "RequestQueue",
+    "ServeConfig",
+    "ServeEngine",
+    "poisson_schedule",
+]
