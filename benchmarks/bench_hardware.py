@@ -1,0 +1,90 @@
+"""Real-hardware kernel lane — compiled Pallas wall-clock (opt-in).
+
+Every other suite runs the Pallas substrate in interpret mode so CPU CI
+can gate COUNT metrics strictly; interpreter wall-clock is meaningless and
+the suites say so.  This lane is the complement: it flips the registry's
+process-wide policy to ``interpret=False`` and times the ACTUAL compiled
+tiled wavefront on whatever accelerator backend is attached, next to the
+compiled ``lax.scan`` twin on the same shapes.
+
+Rules of the lane:
+
+* **opt-in** — reached only via ``python -m benchmarks.run --hardware``
+  (CI: the ``workflow_dispatch`` bench-hardware job);
+* **self-skipping** — when ``jax.default_backend()`` is ``cpu`` there is
+  no accelerator to time, so the lane prints one note and returns zero
+  rows rather than pretending interpreter numbers are hardware numbers;
+* **warn-only** — rows are wall-clock (machine-dependent), never added to
+  ``BENCH_kernels.json``; ``compare.py`` ignores rows absent from the
+  baseline, so this lane can never fail a strict-count gate;
+* **still exact** — parity against the scan backend is asserted on every
+  shape before a timing is recorded (a fast wrong kernel is not a row).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.kernels import registry
+
+#: (mode, (B, Lx, Ly, d), tile) — tile=None exercises the VMEM-budget
+#: heuristic; explicit tiles exercise multi-band carry hand-off at depth
+SHAPES = [
+    ("dtw", (32, 64, 64, 2), None),
+    ("dtw", (32, 64, 64, 2), 16),
+    ("erp", (32, 64, 64, 2), 16),
+    ("lev", (32, 48, 48, None), 12),
+]
+
+
+def run(full: bool = False):
+    import jax
+
+    backend = jax.default_backend()
+    if backend == "cpu":
+        print("# hardware lane: no accelerator attached "
+              "(jax.default_backend()=cpu) — skipping")
+        return []
+
+    out = []
+    prev = registry.set_default_interpret(False)
+    try:
+        rs = np.random.default_rng(0)
+        for mode, (B, Lx, Ly, d), tile in SHAPES:
+            if d is None:
+                xs = rs.integers(0, 8, (B, Lx))
+                ys = rs.integers(0, 8, (B, Ly))
+            else:
+                xs = rs.normal(size=(B, Lx, d)).astype(np.float32)
+                ys = rs.normal(size=(B, Ly, d)).astype(np.float32)
+            spec = registry.get({"dtw": "dtw", "erp": "erp",
+                                 "lev": "levenshtein"}[mode])
+            lx = np.full(B, Lx, np.int64)
+            ly = np.full(B, Ly, np.int64)
+            eps = np.full(B, 2.0, np.float32)
+
+            def pallas_call():
+                return spec.batch(xs, ys, lx, ly, eps=eps,
+                                  exec="pallas", tile=tile)
+
+            def scan_call():
+                return spec.batch(xs, ys, lx, ly, eps=eps, exec="scan")
+
+            got = pallas_call()          # compile + parity before timing
+            ref = scan_call()
+            assert np.allclose(got.dist, ref.dist, rtol=1e-5, atol=1e-5), \
+                f"{mode} tile={tile}: compiled kernel diverged from scan"
+            assert (got.hit == ref.hit).all(), \
+                f"{mode} tile={tile}: compiled kernel changed the hit set"
+
+            dt = timeit(pallas_call) / B
+            scan_dt = timeit(scan_call) / B
+            t = "auto" if tile is None else tile
+            out.append(row(
+                f"hardware_{mode}_t{t}", dt,
+                backend=backend, tile=t, rows=B,
+                scan_us_per_row=round(scan_dt, 2)))
+    finally:
+        registry.set_default_interpret(prev)
+    return out

@@ -9,7 +9,11 @@ or loop-rebound static arguments — is visible in the AST.
 A *jit region* is: a function decorated with ``jax.jit`` (bare or via
 ``partial(jax.jit, static_argnums=...)``), a function or lambda passed to
 ``jax.jit(...)``, a Pallas kernel body (>= 2 parameters ending in
-``_ref``), or a module-local function called from any of those (one hop).
+``_ref``), a loop body handed to ``lax.scan`` / ``lax.fori_loop`` /
+``lax.while_loop`` (the compiled ``exec="scan"`` wavefront enters the
+registry's jit cache exactly this way — its per-diagonal body is traced
+even though nothing around it is decorated), or a module-local function
+called from any of those (one hop).
 
 Rules
 -----
@@ -123,14 +127,51 @@ def _collect_regions(mod: Module):
                     not any(target is r[0] for r in regions):
                 regions.append((target, *_statics_from_keywords(node)))
 
-    # one-hop reachability: module-local defs called from a region body
-    for func, _, _ in list(regions):
+    # loop bodies handed to lax.scan / fori_loop / while_loop are traced
+    # regions with no static params — the scan-mode wavefront
+    # (kernels/wavefront.wavefront_scan) reaches the registry jit cache
+    # through exactly this shape, with zero jit decorators in sight
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and
+                call_terminal(node) in ("scan", "fori_loop", "while_loop")):
+            continue
+        root = dotted(node.func)
+        if not root or root.split(".")[0] not in ("lax", "jax"):
+            continue
+        for arg in node.args:
+            target = None
+            if isinstance(arg, ast.Lambda):
+                target = arg
+            elif isinstance(arg, ast.Name) and arg.id in by_name:
+                target = by_name[arg.id]
+            if target is not None and \
+                    not any(target is r[0] for r in regions):
+                regions.append((target, set(), set()))
+
+    # one-hop reachability: module-local defs called from a region body.
+    # Params fed an argument the CALLER does not itself trace (closure
+    # config objects, static metadata riding through a scan body) stay
+    # static in the callee — branch-on-config is not branch-on-traced.
+    for func, snums, snames in list(regions):
+        caller_traced = _traced_params(func, snums, snames)
         for node in ast.walk(func):
-            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
-                callee = by_name.get(node.func.id)
-                if callee is not None and \
-                        not any(callee is r[0] for r in regions):
-                    regions.append((callee, set(), set()))
+            if not (isinstance(node, ast.Call) and
+                    isinstance(node.func, ast.Name)):
+                continue
+            callee = by_name.get(node.func.id)
+            if callee is None or any(callee is r[0] for r in regions):
+                continue
+            params = _params(callee)
+            inherited: Set[str] = set()
+            for i, a in enumerate(node.args):
+                if i < len(params) and isinstance(a, ast.Name) and \
+                        a.id not in caller_traced:
+                    inherited.add(params[i])
+            for kw in node.keywords:
+                if kw.arg and isinstance(kw.value, ast.Name) and \
+                        kw.value.id not in caller_traced:
+                    inherited.add(kw.arg)
+            regions.append((callee, set(), inherited))
     return regions
 
 

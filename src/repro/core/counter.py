@@ -50,8 +50,15 @@ BUILD = "build"
 from repro.kernels.registry import _pad_pow2  # one pow2 padding discipline
 
 
-def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
-    """A ``(xs, ys, lx, ly) -> (B,) np.ndarray`` batch function."""
+def _resolve_backend(dist: dist_base.Distance, backend: str,
+                     kernel_exec: Optional[str] = None,
+                     kernel_tile: Optional[int] = None) -> Callable:
+    """A ``(xs, ys, lx, ly) -> (B,) np.ndarray`` batch function.
+
+    ``kernel_exec``/``kernel_tile`` thread the wavefront execution mode
+    and Pallas band depth into the pallas backend's packed dispatches
+    (None: the kernel registry's process-wide policy / VMEM heuristic);
+    the other backends ignore them."""
     if backend == "numpy":
         try:
             return np_backend.batch_for(dist.name)
@@ -76,7 +83,8 @@ def _resolve_backend(dist: dist_base.Distance, backend: str) -> Callable:
             # engages the fused ε path — non-hit rows come back as the BIG
             # sentinel, which preserves every <= eps verdict.
             out = kernel_dispatch.packed_batch(dist.name, xs, ys, lx, ly,
-                                               eps=eps)
+                                               eps=eps, exec=kernel_exec,
+                                               tile=kernel_tile)
             return out.dist
 
         pallas_batch.fused = True  # accepts the fused-ε keyword
@@ -123,12 +131,17 @@ class CountedDistance:
     """Batched distances from query objects to indexed database windows."""
 
     def __init__(self, dist: dist_base.Distance, data: np.ndarray, *,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 kernel_exec: Optional[str] = None,
+                 kernel_tile: Optional[int] = None):
         self.dist = dist
         self.data = np.asarray(data)
         self.n = len(self.data)
         self.backend = backend
-        self._batch = _resolve_backend(dist, backend)
+        self.kernel_exec = kernel_exec
+        self.kernel_tile = kernel_tile
+        self._batch = _resolve_backend(dist, backend, kernel_exec,
+                                       kernel_tile)
         self.count = 0       # exact evaluations (paper currency)
         self.dispatches = 0  # Python-level backend dispatches
         self.lb_count = 0    # cheap lower-bound evaluations (LB cascade)

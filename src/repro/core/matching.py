@@ -109,7 +109,9 @@ class SubsequenceMatcher:
                  num_max: Optional[int] = None, tight_bounds: bool = False,
                  mv_refs: int = 5, backend: str = "numpy",
                  lb_cascade=False, batched: bool = True,
-                 bulk_build: bool = True):
+                 bulk_build: bool = True,
+                 kernel_exec: Optional[str] = None,
+                 kernel_tile: Optional[int] = None):
         _deprecation.warn_legacy("SubsequenceMatcher")
         from repro.retrieval import registry as retrieval_registry
         self.dist = dist_base.require_consistent(dist)
@@ -121,6 +123,8 @@ class SubsequenceMatcher:
         self.l = seg.window_length(lam)
         self.index_kind = index
         self.backend = backend
+        self.kernel_exec = kernel_exec
+        self.kernel_tile = kernel_tile
         self.lb_cascade = lb_cascade
         self.batched = batched  # False = legacy per-segment host traversal
         self.bulk_build = bulk_build
@@ -152,7 +156,9 @@ class SubsequenceMatcher:
         self.seqs = [np.asarray(x) for x in seqs]
         self.windows, self.meta = seg.partition_windows(self.seqs, self.lam)
         counter = CountedDistance(self.dist, self.windows,
-                                  backend=self.backend)
+                                  backend=self.backend,
+                                  kernel_exec=self.kernel_exec,
+                                  kernel_tile=self.kernel_tile)
         index = self.index_spec.factory(self.dist, self.windows,
                                         counter=counter, **self.index_kwargs)
         if self.index_spec.bulk and self.bulk_build:

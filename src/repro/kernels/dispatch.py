@@ -124,12 +124,15 @@ def pack_meta(lx: np.ndarray, ly: np.ndarray
 
 def packed_batch(name: str, xs, ys, lx=None, ly=None, *, eps=None,
                  block_b: int = 8, interpret: Optional[bool] = None,
+                 exec: Optional[str] = None, tile: Optional[int] = None,
                  shards=None) -> registry.KernelOut:
     """ONE padded device call over every length bucket of a round.
 
     ``xs``/``ys`` are row-paired batches whose rows may come from different
     ``(len_x, len_y)`` buckets (``lx``/``ly`` carry the actual lengths);
     ``eps`` (scalar or per-row; +inf rows opt out) enables fused ε-pruning.
+    ``exec``/``tile`` pick the wavefront execution mode and Pallas band
+    depth (None: the registry's process-wide policy / VMEM heuristic).
     ``shards`` optionally carries per-row provenance (the fleet worker slot
     each row's candidate window lives on) when a round-based fleet query
     merges frontiers across shards — recorded in :data:`STATS` and
@@ -155,7 +158,7 @@ def packed_batch(name: str, xs, ys, lx=None, ly=None, *, eps=None,
     out = spec.batch(
         xs[order], ys[order], lx[order], ly[order],
         eps=None if eps_v is None else eps_v[order],
-        block_b=block_b, interpret=interpret)
+        block_b=block_b, interpret=interpret, exec=exec, tile=tile)
 
     inv = np.empty_like(order)
     inv[order] = np.arange(B)

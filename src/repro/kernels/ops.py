@@ -34,7 +34,7 @@ def _pad_batch(a, mult):
 
 
 def wavefront(xs, ys, mode: str, *, block_b: int = 8, interpret=None,
-              lens_x=None, lens_y=None, eps=None):
+              lens_x=None, lens_y=None, eps=None, exec=None, tile=None):
     """Batched alignment distance through the kernel registry.
 
     Args:
@@ -43,6 +43,9 @@ def wavefront(xs, ys, mode: str, *, block_b: int = 8, interpret=None,
       mode: one of dtw | erp | dfd | lev.
       lens_x, lens_y: optional per-row actual lengths (ragged batches).
       eps: optional fused-ε threshold (scalar or per-row).
+      exec: wavefront execution mode (``pallas`` | ``scan``; None follows
+        the registry's process-wide policy).
+      tile: Pallas band depth (None: the registry's VMEM heuristic).
 
     Returns: (B,) float32 distances, or the full
     :class:`~repro.kernels.registry.KernelOut` when ``eps`` is given.
@@ -51,7 +54,7 @@ def wavefront(xs, ys, mode: str, *, block_b: int = 8, interpret=None,
     spec = registry.spec_for_mode(mode)
     # lint: allow[acct-raw-kernel-call] -- compatibility wrapper: registry.STATS counts its calls/traces; callers (benchmarks, kernel tests) do their own accounting
     out = spec.batch(xs, ys, lens_x, lens_y, eps=eps, block_b=block_b,
-                     interpret=interpret)
+                     interpret=interpret, exec=exec, tile=tile)
     return out if eps is not None else out.dist
 
 

@@ -8,10 +8,13 @@ matmul per (128, 128) output tile with both operand tiles resident in VMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import registry
 
 
 def _kernel(x_ref, y_ref, out_ref):
@@ -26,9 +29,22 @@ def _kernel(x_ref, y_ref, out_ref):
     out_ref[...] = jnp.sqrt(jnp.maximum(d2, 0.0))
 
 
+def pairwise_l2_pallas(x, y, *, bm: int = 128, bn: int = 128,
+                       interpret: Optional[bool] = None):
+    """(M, d) x (N, d) -> (M, N); M, N padded to tile multiples by ops.py.
+
+    ``interpret=None`` resolves through the registry's single process-wide
+    interpret policy (``registry.default_interpret()``) — resolution
+    happens *outside* the jitted inner so a later policy change (the
+    ``set_default_interpret`` hook, the hardware lane) is never shadowed
+    by a stale jit cache entry keyed on None.
+    """
+    return _pairwise_l2_jit(x, y, bm=bm, bn=bn,
+                            interpret=registry.resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def pairwise_l2_pallas(x, y, *, bm=128, bn=128, interpret=True):
-    """(M, d) x (N, d) -> (M, N); M, N padded to tile multiples by ops.py."""
+def _pairwise_l2_jit(x, y, *, bm, bn, interpret):
     M, d = x.shape
     N = y.shape[0]
     assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)

@@ -15,10 +15,22 @@ registry is that substrate's single entry point:
   bound: the LB-cascade tier-1 kernel, pure O(B*L) elementwise work that
   shares this cache and the zero-retrace gate);
 * one ``interpret`` policy: resolved against the default JAX backend once
-  per process (:func:`default_interpret`), not per call;
-* one jit cache: every ``(kernel, Lx, Ly, d, batch, block, interpret)``
-  shape class compiles exactly once (:data:`STATS` counts traces — the
-  retrace regression tests gate this);
+  per process (:func:`default_interpret`), not per call — overridable via
+  the ``REPRO_INTERPRET`` env var or the :func:`set_default_interpret`
+  test/bench hook (the real-hardware benchmark lane pins ``False``);
+* one execution-mode policy for the wavefront specs
+  (:func:`default_exec`): ``"pallas"`` (the banded VMEM-blocked kernel —
+  interpret-mode off-TPU, real hardware on TPU) or ``"scan"`` (the
+  compiled ``lax.scan`` wavefront, the measured win on CPU CI) —
+  overridable via ``REPRO_KERNEL_EXEC``, :func:`set_default_exec`,
+  ``RetrievalConfig.kernel_exec``, or per call;
+* one band-tile policy for the Pallas schedule: :func:`default_tile`
+  picks the deepest band that fits the per-band VMEM budget (static per
+  shape — part of the jit cache key), overridable via
+  ``RetrievalConfig.kernel_tile`` or per call;
+* one jit cache: every ``(kernel, Lx, Ly, d, batch, block, interpret,
+  exec, tile)`` shape class compiles exactly once (:data:`STATS` counts
+  traces — the retrace regression tests gate this);
 * fused ε-pruning (Twin Subsequence Search, arXiv:2104.06874): pass
   ``eps`` and the kernel returns the hit mask and early-prune certificate
   alongside ``BIG``-masked distances, so range queries never materialize
@@ -35,13 +47,14 @@ Two calling conventions per spec:
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.wavefront import BIG, wavefront_pallas
+from repro.kernels.wavefront import (BIG, wavefront_pallas, wavefront_scan)
 
 #: wavefront mode <-> distance-registry name
 MODE_OF_NAME = {"dtw": "dtw", "erp": "erp", "frechet": "dfd",
@@ -54,6 +67,15 @@ STATS = {"traces": 0, "calls": 0}
 
 _JIT_CACHE: Dict[tuple, object] = {}
 _DEFAULT_INTERPRET: Optional[bool] = None
+
+#: wavefront execution modes: the banded Pallas kernel vs the compiled
+#: ``lax.scan`` wavefront (same layout, same per-diagonal math)
+EXEC_MODES = ("pallas", "scan")
+_DEFAULT_EXEC: Optional[str] = None
+
+#: per-band VMEM budget (bytes) for the tiled wavefront — a conservative
+#: slice of the ~16 MiB/core TPU VMEM, leaving room for double buffering
+VMEM_TILE_BUDGET = 1 << 22
 
 
 class KernelOut(NamedTuple):
@@ -69,15 +91,98 @@ class KernelOut(NamedTuple):
 
 
 def default_interpret() -> bool:
-    """Interpret-mode policy, resolved against the JAX backend ONCE."""
+    """Interpret-mode policy, resolved ONCE per process.
+
+    Resolution order: a value pinned by :func:`set_default_interpret`, the
+    ``REPRO_INTERPRET`` env var (``1/true/yes/on`` vs anything else), then
+    the JAX backend (interpret everywhere except TPU).  The env override
+    lets tests and the ``--hardware`` benchmark lane pin the policy
+    without import-order games."""
     global _DEFAULT_INTERPRET
     if _DEFAULT_INTERPRET is None:
-        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+        env = os.environ.get("REPRO_INTERPRET")
+        if env is not None:
+            _DEFAULT_INTERPRET = \
+                env.strip().lower() in ("1", "true", "yes", "on")
+        else:
+            _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
     return _DEFAULT_INTERPRET
+
+
+def set_default_interpret(value: Optional[bool]) -> Optional[bool]:
+    """Pin the process-wide interpret policy (test/bench hook).
+
+    ``None`` clears the pin so the next :func:`default_interpret` call
+    re-resolves from ``REPRO_INTERPRET`` / the JAX backend.  Returns the
+    previously pinned value (None if it was unresolved) so callers can
+    restore it."""
+    global _DEFAULT_INTERPRET
+    prev = _DEFAULT_INTERPRET
+    _DEFAULT_INTERPRET = None if value is None else bool(value)
+    return prev
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def default_exec() -> str:
+    """Wavefront execution-mode policy, resolved ONCE per process.
+
+    ``REPRO_KERNEL_EXEC`` (``pallas`` | ``scan``) overrides the default
+    (``pallas``); :func:`set_default_exec` pins it programmatically."""
+    global _DEFAULT_EXEC
+    if _DEFAULT_EXEC is None:
+        env = os.environ.get("REPRO_KERNEL_EXEC", "").strip().lower()
+        if env and env not in EXEC_MODES:
+            raise ValueError(
+                f"REPRO_KERNEL_EXEC must be one of {EXEC_MODES}; "
+                f"got {env!r}")
+        _DEFAULT_EXEC = env or "pallas"
+    return _DEFAULT_EXEC
+
+
+def set_default_exec(value: Optional[str]) -> Optional[str]:
+    """Pin the process-wide wavefront execution mode (test/bench hook).
+
+    ``None`` clears the pin (next resolution re-reads the env var).
+    Returns the previously pinned value for restore."""
+    global _DEFAULT_EXEC
+    if value is not None and value not in EXEC_MODES:
+        raise ValueError(
+            f"exec mode must be one of {EXEC_MODES}; got {value!r}")
+    prev = _DEFAULT_EXEC
+    _DEFAULT_EXEC = value
+    return prev
+
+
+def resolve_exec(exec_mode: Optional[str]) -> str:
+    if exec_mode is None:
+        return default_exec()
+    if exec_mode not in EXEC_MODES:
+        raise ValueError(
+            f"exec mode must be one of {EXEC_MODES}; got {exec_mode!r}")
+    return exec_mode
+
+
+def default_tile(Lx: int, Ly: int, d: int, block_b: int = 8,
+                 budget: int = VMEM_TILE_BUDGET) -> int:
+    """Deepest anti-diagonal band whose working set fits the VMEM budget.
+
+    The banded kernel's per-band, per-batch-block f32 residency is the x
+    tile (``(Lx+1)*d``), the band's reversed-y tile (``(Lx+tile)*(d+1)``
+    including the ERP gap row), the borders, and the carry scratch (two
+    diagonals + answer/liveness columns); only the y tile scales with the
+    band depth, so the deepest admissible tile is linear in the budget.
+    Clamped to ``[8, Lx+Ly]`` — on short segments (every CI bench shape)
+    the whole DP fits one band, which is exactly the untiled schedule.
+    """
+    W = Lx + 1
+    K = Lx + Ly
+    fixed = W * d + Lx * (d + 1) + W + (Ly + 1) + 2 * W + 8
+    per_t = d + 1
+    T = (budget // (4 * block_b) - fixed) // per_t
+    return max(8, min(int(T), K))
 
 
 def clear_cache() -> None:
@@ -112,14 +217,19 @@ class KernelSpec:
     # -- traceable path ------------------------------------------------------
 
     def device_call(self, xs, ys, lx=None, ly=None, eps=None, *,
-                    block_b: int = 8, interpret: Optional[bool] = None
-                    ) -> KernelOut:
+                    block_b: int = 8, interpret: Optional[bool] = None,
+                    exec: Optional[str] = None,
+                    tile: Optional[int] = None) -> KernelOut:
         """Traceable batched evaluation -> :class:`KernelOut` of jnp arrays.
 
         ``xs``/``ys`` are row-paired ``(B, Lx[, d])`` / ``(B, Ly[, d])``
         batches (integer tokens for the string distances); ``lx``/``ly``
         per-row actual lengths (default: the padded widths); ``eps`` a
         scalar or per-row threshold enabling the fused ε outputs.
+        ``exec`` picks the wavefront execution mode (``pallas`` | ``scan``;
+        None follows :func:`default_exec`) and ``tile`` the Pallas band
+        depth (None: the :func:`default_tile` VMEM heuristic) — both only
+        apply to the wavefront specs.
         """
         interpret = resolve_interpret(interpret)
         xs = jnp.asarray(xs)
@@ -136,7 +246,8 @@ class KernelSpec:
         if self.kind == "envelope":
             return self._envelope(xs, ys, lx, ly, eps_v)
         return self._wavefront(xs, ys, lx, ly, eps_v, block_b=block_b,
-                               interpret=interpret)
+                               interpret=interpret,
+                               exec_mode=resolve_exec(exec), tile=tile)
 
     def _elementwise(self, xs, ys, lx, eps_v) -> KernelOut:
         L = xs.shape[1]
@@ -215,8 +326,9 @@ class KernelSpec:
         hit = lb <= eps_v
         return KernelOut(lb, hit, ~hit)
 
-    def _wavefront(self, xs, ys, lx, ly, eps_v, *, block_b, interpret
-                   ) -> KernelOut:
+    def _wavefront(self, xs, ys, lx, ly, eps_v, *, block_b, interpret,
+                   exec_mode: str = "pallas",
+                   tile: Optional[int] = None) -> KernelOut:
         mode = self.mode
         xs = xs.astype(jnp.float32)  # lev tokens ride as exact small floats
         ys = ys.astype(jnp.float32)
@@ -271,25 +383,37 @@ class KernelSpec:
         eps_col = eps_v[:, None]
         args = [x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row,
                 lens, eps_col]
+        if exec_mode == "scan":
+            # compiled lax.scan twin: same layout, same per-diagonal math,
+            # no batch blocking or banding (XLA owns the schedule)
+            dist, hit, pruned = wavefront_scan(
+                *args, mode=mode, Lx=Lx, Ly=Ly, d=d)
+            return KernelOut(dist, hit, pruned)
         P = B + ((-B) % block_b)
         if P != B:
             args = [jnp.pad(a, [(0, P - B)] + [(0, 0)] * (a.ndim - 1))
                     for a in args]
+        if tile is None:
+            tile = default_tile(Lx, Ly, d, block_b)
         dist, hit, pruned = wavefront_pallas(
             *args, mode=mode, Lx=Lx, Ly=Ly, d=d, block_b=block_b,
-            interpret=interpret)
+            interpret=interpret, tile=tile)
         return KernelOut(dist[:B], hit[:B], pruned[:B])
 
     # -- host path (cached jit) ----------------------------------------------
 
     def batch(self, xs, ys, lx=None, ly=None, eps=None, *,
-              block_b: int = 8, interpret: Optional[bool] = None
-              ) -> KernelOut:
+              block_b: int = 8, interpret: Optional[bool] = None,
+              exec: Optional[str] = None,
+              tile: Optional[int] = None) -> KernelOut:
         """Host entry: numpy in/out, shapes padded and jit-cached.
 
         ``lx``/``ly`` may mix length buckets freely; operands are trimmed
         to the max actual lengths and the batch padded to a power of two so
-        the number of distinct compiled shapes stays bounded.
+        the number of distinct compiled shapes stays bounded.  ``exec`` /
+        ``tile`` select the wavefront execution mode and Pallas band depth
+        (see :meth:`device_call`); both resolve to static values *before*
+        the cache lookup, so each (shape, exec, tile) class compiles once.
         """
         xs = np.asarray(xs)
         ys = np.asarray(ys)
@@ -310,18 +434,28 @@ class KernelSpec:
         eps_v = np.full(B, np.inf, np.float32) if eps is None else \
             np.broadcast_to(np.asarray(eps, np.float32), (B,))
         interpret = resolve_interpret(interpret)
+        if self.kind == "wavefront":
+            exec_mode = resolve_exec(exec)
+            if exec_mode == "pallas" and tile is None:
+                dim = xs.shape[2] if xs.ndim == 3 else 1
+                tile = default_tile(xs.shape[1], ys.shape[1], dim, block_b)
+            if exec_mode == "scan":
+                tile = None  # scan has no banding: one cache entry per shape
+        else:
+            exec_mode, tile = None, None  # elementwise/envelope: pure jnp
 
         P = _pad_pow2(max(B, block_b))
-        fn = self._cached(xs, ys, P, block_b, interpret)
+        fn = self._cached(xs, ys, P, block_b, interpret, exec_mode, tile)
         d, h, p = fn(_pad_rows(xs, P), _pad_rows(ys, P), _pad_rows(lx, P),
                      _pad_rows(ly, P), _pad_rows(eps_v, P))
         STATS["calls"] += 1
         return KernelOut(np.asarray(d)[:B], np.asarray(h)[:B],
                          np.asarray(p)[:B])
 
-    def _cached(self, xs, ys, P, block_b, interpret):
+    def _cached(self, xs, ys, P, block_b, interpret, exec_mode=None,
+                tile=None):
         key = (self.name, xs.shape[1:], str(xs.dtype), ys.shape[1:],
-               str(ys.dtype), P, block_b, interpret)
+               str(ys.dtype), P, block_b, interpret, exec_mode, tile)
         fn = _JIT_CACHE.get(key)
         if fn is None:
             spec = self
@@ -329,7 +463,8 @@ class KernelSpec:
             def traced(xs, ys, lx, ly, eps):
                 STATS["traces"] += 1  # python side effect: runs per (re)trace
                 return spec.device_call(xs, ys, lx, ly, eps,
-                                        block_b=block_b, interpret=interpret)
+                                        block_b=block_b, interpret=interpret,
+                                        exec=exec_mode, tile=tile)
 
             fn = jax.jit(traced)
             _JIT_CACHE[key] = fn

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: batched anti-diagonal wavefront alignment DP.
+"""Pallas TPU kernel: batched anti-diagonal wavefront alignment DP,
+VMEM-blocked into diagonal bands.
 
 This is the paper's compute hot spot (§5/§7 step 4: every query segment is
 compared against every surviving database window under an O(l^2) alignment
@@ -6,43 +7,65 @@ distance).  The TPU-native schedule:
 
 * the batch of independent DP problems rides the sublane axis — one grid
   cell owns a ``(block_b, L+1)`` wavefront held in VMEM/VREGs;
-* the 2l diagonal steps are a ``fori_loop`` whose body is pure VPU work:
-  two rolling diagonal buffers, an elementwise cost slice, min/add;
+* the ``2l`` diagonal steps are cut into **bands** of ``tile`` consecutive
+  anti-diagonals; the grid is ``(batch block, band)`` and each cell runs a
+  ``fori_loop`` over its band's diagonals — pure VPU work: two rolling
+  diagonal buffers, an elementwise cost slice, min/add;
 * the elementwise cost is computed **on the fly** from the x tile and a
-  *flipped* y tile: cost of diagonal k is ``elem(x[i-1], y[k-i-1])`` which is
-  a contiguous ``dynamic_slice`` of reversed-y — no gathers, no (L x L) cost
-  tile in HBM, arithmetic intensity stays on-chip;
+  *flipped* y tile: cost of diagonal k is ``elem(x[i-1], y[k-i-1])`` which
+  is a contiguous ``dynamic_slice`` of reversed-y — no gathers, no (L x L)
+  cost tile in HBM, arithmetic intensity stays on-chip;
+* per band, only that band's ``(Lx + tile)``-wide window of reversed-y is
+  staged (``band_layout`` pre-gathers the overlapping windows, since a
+  BlockSpec index map can only address multiples of the block shape), so
+  the VMEM working set is fixed by the tile, not the segment length;
+* the two carry diagonals, the per-row answer, and the fused-ε liveness
+  certificate are handed between bands through VMEM scratch accumulators
+  — TPU grids iterate sequentially (bands innermost), so band ``j`` reads
+  exactly what band ``j-1`` wrote, and the final band materializes the
+  outputs;
 * borders (column j=0 / row i=0) are injected per step from precomputed
   border vectors (constant for DTW/DFD/Lev, gap cumsums for ERP).
 
 Ragged batches: every row carries its own ``(len_x, len_y)`` (the packed
 dispatcher concatenates all length buckets of a round into one call), and
 the answer ``D[len_x, len_y]`` is recorded on the fly when diagonal
-``len_x + len_y`` passes.  Cells outside a row's actual problem compute
-padding garbage that never feeds its answer cell (DP dependencies only
-point to smaller indices).
+``len_x + len_y`` passes — whichever band that diagonal lands in.  Cells
+outside a row's actual problem compute padding garbage that never feeds
+its answer cell (DP dependencies only point to smaller indices).
 
 Fused ε-pruning: each row also carries an ``eps`` threshold.  All four
 distances are monotone along alignment paths (every combine adds a
 nonnegative cost or takes a max), and any monotone path touches at least
 one cell of any two consecutive diagonals, so ``min`` over the two rolling
 diagonals exceeding ``eps`` is a certificate that the final distance does.
-The kernel tracks that certificate per row (the ``pruned`` output) and only
-materializes distances for rows whose verdict is a hit — pruned and missed
-rows ship the ``BIG`` sentinel plus a 0 in the ``hit`` mask.  Passing
-``eps = +inf`` (the default layout for value-consuming callers) disables
-both effects, so fused and plain evaluation share one compiled kernel.
+The kernel tracks that certificate per row step-by-step (bit-identical to
+the untiled schedule), but a prune **verdict** is only ever emitted at a
+band boundary — the certificate rides the scratch accumulators and the
+``pruned`` output materializes with the final band, which preserves
+soundness under any band split.  Rows with ``eps = +inf`` (the default
+layout for value-consuming callers) disable both effects, so fused and
+plain evaluation share one compiled kernel.
+
+:func:`wavefront_scan` is the compiled ``lax.scan`` twin (the registry's
+``exec="scan"`` mode): the same operand layout and the same per-diagonal
+update (:func:`_make_step` is the single source of the DP math for every
+execution mode), scanned over diagonals as one XLA while loop — the
+measured win on CPU CI, while the Pallas path targets TPU.
 
 Modes: ``dtw`` / ``erp`` / ``dfd`` / ``lev`` (paper's four alignment
-distances).  Per-call padded shapes are static; the registry
-(``kernels/registry.py``) owns the jit cache over them.
+distances).  Per-call padded shapes and the band tile are static; the
+registry (``kernels/registry.py``) owns the jit cache over them.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BIG = 3.4e37  # python float: Pallas kernels must not capture traced constants
 
@@ -51,15 +74,102 @@ def _shift_right(v, fill):
     return jnp.concatenate([jnp.full_like(v[:, :1], fill), v[:, :-1]], axis=1)
 
 
-def _make_kernel(mode: str, Lx: int, Ly: int, d: int):
-    W = Lx + 1
+def _make_step(mode: str, Lx: int, Ly: int):
+    """One anti-diagonal DP update — the single source of the per-step math.
 
-    def kernel(x_ref, yr_ref, gx_ref, gyr_ref, bc_ref, br_ref, lens_ref,
-               eps_ref, out_ref, hit_ref, prune_ref):
+    Every execution mode (tiled Pallas, interpret-mode Pallas, compiled
+    scan) calls this exact closure, so their results are bit-identical and
+    the parity gates compare equality, not tolerance.  ``carry`` is
+    ``(d1, d2, res, alive)``: the two rolling diagonals, the recorded
+    answers, and the fused-ε liveness mask (f32 0/1 so it can ride VMEM
+    scratch).  ``ysl``/``gy`` are diagonal ``k``'s reversed-y window and
+    ERP gap window, already sliced by the caller (full-layout or band-tile
+    offsets — the only thing that differs between execution modes).
+    """
+
+    def step(k, carry, x, ysl, gx, gy, bc, br, lx, target, eps, ii):
+        d1, d2, res, alive = carry  # diagonals k-1, k-2
+        Bt = x.shape[0]
+        if mode == "lev":
+            c = (jnp.sum(jnp.abs(x - ysl), axis=-1) > 0).astype(jnp.float32)
+        else:
+            c = jnp.sqrt(jnp.maximum(jnp.sum((x - ysl) ** 2, axis=-1), 0.0))
+            c = jnp.minimum(c, BIG)
+        dd = _shift_right(d2, BIG)
+        du = _shift_right(d1, BIG)
+        dl = d1
+        if mode == "dtw":
+            new = c + jnp.minimum(dd, jnp.minimum(du, dl))
+        elif mode == "dfd":
+            new = jnp.maximum(c, jnp.minimum(dd, jnp.minimum(du, dl)))
+        elif mode == "lev":
+            new = jnp.minimum(dd + c, jnp.minimum(du + 1.0, dl + 1.0))
+        else:  # erp
+            new = jnp.minimum(dd + c, jnp.minimum(du + gx, dl + gy))
+        # clamp: sums of quasi-infinities must stay quasi-infinite, never
+        # run off to float32 inf/NaN (long high-gap-mass series)
+        new = jnp.minimum(new, BIG)
+        # border column j = 0 lives at position i = k (while k <= Lx)
+        colv = jax.lax.dynamic_slice(bc, (0, jnp.minimum(k, Lx)), (Bt, 1))
+        new = jnp.where((ii == k) & (k <= Lx), colv, new)
+        # border row i = 0 lives at position 0 (while k <= Ly)
+        rowv = jax.lax.dynamic_slice(br, (0, jnp.minimum(k, Ly)), (Bt, 1))
+        new = jnp.where(ii == 0, jnp.where(k <= Ly, rowv, BIG), new)
+        # outside the valid band
+        new = jnp.where((ii > k) | (ii < k - Ly), BIG, new)
+        # record each row's answer when its target diagonal passes
+        val = jnp.sum(jnp.where(ii == lx, new, 0.0), axis=1, keepdims=True)
+        res = jnp.where(target == k, val, res)
+        # fused ε certificate: every monotone path touches one of any two
+        # consecutive diagonals, so both exceeding eps bounds the final
+        rowmin = jnp.min(jnp.minimum(new, d1), axis=1, keepdims=True)
+        ok = ((rowmin <= eps) | (k > target)).astype(jnp.float32)
+        return (new, d1, res, alive * ok)
+
+    return step
+
+
+def band_layout(y_rev_pad, Lx: int, Ly: int, tile: int):
+    """Pre-gather the per-band overlapping reversed-y windows.
+
+    Band ``j`` (diagonals ``j*tile+1 .. (j+1)*tile``) reads reversed-y
+    window starts ``s(k) = Lx+1+Ly-k`` over ``tile`` consecutive diagonals,
+    i.e. the ``(Lx + tile)``-wide stretch starting at
+    ``o_j = Lx+1+Ly-(j+1)*tile``.  A BlockSpec index map can only address
+    multiples of the block shape, so overlapping stride-``tile`` windows of
+    width ``Lx + tile`` are not expressible directly — instead the bands
+    are gathered side by side into a ``(B, nbands*(Lx+tile)[, d])`` operand
+    whose ``j``-th slab is band ``j``'s tile, and the kernel's in-band
+    dynamic-slice offset for diagonal ``k`` is ``(j+1)*tile - k``
+    (``tile-1-t`` for the band-local step index ``t``).
+
+    Late bands clip below index 0; clipped positions are only ever read by
+    DP cells outside the valid band, whose values the kernel overwrites
+    with borders or the BIG sentinel before they can feed any answer.
+    """
+    Ypad = y_rev_pad.shape[1]
+    K = Lx + Ly
+    nbands = -(-K // tile)
+    Wb = Lx + tile
+    w = jnp.arange(Wb)
+    o = Lx + 1 + Ly - (jnp.arange(nbands) + 1) * tile
+    idx = jnp.clip(o[:, None] + w[None, :], 0, Ypad - 1).reshape(-1)
+    return jnp.take(y_rev_pad, idx, axis=1)
+
+
+def _make_kernel(mode: str, Lx: int, Ly: int, d: int, tile: int,
+                 nbands: int):
+    W = Lx + 1
+    K = Lx + Ly
+    step = _make_step(mode, Lx, Ly)
+
+    def kernel(x_ref, yb_ref, gx_ref, gyb_ref, bc_ref, br_ref, lens_ref,
+               eps_ref, out_ref, hit_ref, prune_ref,
+               d1_ref, d2_ref, res_ref, alive_ref):
         x = x_ref[...]          # (Bt, W, d)   x[i] = x_orig[i-1]
-        yr = yr_ref[...]        # (Bt, Ypad, d) reversed+padded y
+        yb = yb_ref[...]        # (Bt, Lx+tile, d) this band's reversed-y tile
         gx = gx_ref[...]        # (Bt, W)      ERP gap cost of x_i (else 0)
-        gyr = gyr_ref[...]      # (Bt, Ypad)   reversed+padded ERP gap of y
+        gyb = gyb_ref[...]      # (Bt, Lx+tile) banded reversed ERP gap of y
         bc = bc_ref[...]        # (Bt, Lx+1)   border column D[i,0]
         br = br_ref[...]        # (Bt, Ly+1)   border row    D[0,j]
         lens = lens_ref[...]    # (Bt, 2)      int32 actual (len_x, len_y)
@@ -68,102 +178,150 @@ def _make_kernel(mode: str, Lx: int, Ly: int, d: int):
         lx = lens[:, 0:1]
         target = lx + lens[:, 1:2]   # diagonal holding D[len_x, len_y]
         ii = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+        j = pl.program_id(1)
 
-        diag0 = jnp.full((Bt, W), BIG, jnp.float32)
-        diag0 = diag0.at[:, 0].set(bc[:, 0])
-        dinit = jnp.full((Bt, W), BIG, jnp.float32)
-        res0 = jnp.where(target == 0, diag0[:, 0:1], BIG)
-        alive0 = jnp.ones((Bt, 1), jnp.bool_)
+        # band 0 seeds the carry scratch; later bands inherit band j-1's
+        # (TPU grids iterate sequentially with bands innermost, and the
+        # scratch accumulators persist across a batch block's grid cells)
+        @pl.when(j == 0)
+        def _init():
+            diag0 = jnp.full((Bt, W), BIG,
+                             jnp.float32).at[:, 0].set(bc[:, 0])
+            d1_ref[...] = diag0
+            d2_ref[...] = jnp.full((Bt, W), BIG, jnp.float32)
+            res_ref[...] = jnp.where(target == 0, diag0[:, 0:1], BIG)
+            alive_ref[...] = jnp.ones((Bt, 1), jnp.float32)
 
-        def body(k, carry):
-            d1, d2, res, alive = carry  # diagonals k-1, k-2
-            s = Lx + 1 + Ly - k  # start of the diagonal window in reversed y
-            ysl = jax.lax.dynamic_slice(yr, (0, s, 0), (Bt, W, d))
-            if mode == "lev":
-                c = (jnp.sum(jnp.abs(x - ysl), axis=-1) > 0).astype(jnp.float32)
+        def body(t, carry):
+            k = j * tile + 1 + t
+            # diagonal k's window inside this band's tile (see band_layout)
+            off = tile - 1 - t
+            ysl = jax.lax.dynamic_slice(yb, (0, off, 0), (Bt, W, d))
+            if mode == "erp":
+                gy = jax.lax.dynamic_slice(gyb, (0, off), (Bt, W))
             else:
-                c = jnp.sqrt(jnp.maximum(jnp.sum((x - ysl) ** 2, axis=-1), 0.0))
-                c = jnp.minimum(c, BIG)
-            dd = _shift_right(d2, BIG)
-            du = _shift_right(d1, BIG)
-            dl = d1
-            if mode == "dtw":
-                new = c + jnp.minimum(dd, jnp.minimum(du, dl))
-            elif mode == "dfd":
-                new = jnp.maximum(c, jnp.minimum(dd, jnp.minimum(du, dl)))
-            elif mode == "lev":
-                new = jnp.minimum(dd + c, jnp.minimum(du + 1.0, dl + 1.0))
-            else:  # erp
-                gy = jax.lax.dynamic_slice(gyr, (0, s), (Bt, W))
-                new = jnp.minimum(dd + c, jnp.minimum(du + gx, dl + gy))
-            # clamp: sums of quasi-infinities must stay quasi-infinite, never
-            # run off to float32 inf/NaN (long high-gap-mass series)
-            new = jnp.minimum(new, BIG)
-            # border column j = 0 lives at position i = k (while k <= Lx)
-            colv = jax.lax.dynamic_slice(bc, (0, jnp.minimum(k, Lx)), (Bt, 1))
-            new = jnp.where((ii == k) & (k <= Lx), colv, new)
-            # border row i = 0 lives at position 0 (while k <= Ly)
-            rowv = jax.lax.dynamic_slice(br, (0, jnp.minimum(k, Ly)), (Bt, 1))
-            new = jnp.where(ii == 0, jnp.where(k <= Ly, rowv, BIG), new)
-            # outside the valid band
-            new = jnp.where((ii > k) | (ii < k - Ly), BIG, new)
-            # record each row's answer when its target diagonal passes
-            val = jnp.sum(jnp.where(ii == lx, new, 0.0), axis=1, keepdims=True)
-            res = jnp.where(target == k, val, res)
-            # fused ε certificate: every monotone path touches one of any two
-            # consecutive diagonals, so both exceeding eps bounds the final
-            rowmin = jnp.min(jnp.minimum(new, d1), axis=1, keepdims=True)
-            alive = alive & ((rowmin <= eps) | (k > target))
-            return (new, d1, res, alive)
+                gy = gx
+            out = step(k, carry, x, ysl, gx, gy, bc, br, lx, target, eps,
+                       ii)
+            # the last band may be ragged: steps past diagonal K are no-ops
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(k <= K, n, o), out, carry)
 
-        _, _, res, alive = jax.lax.fori_loop(
-            1, Lx + Ly + 1, body, (diag0, dinit, res0, alive0))
-        hit = res <= eps
-        out_ref[...] = jnp.where(hit, res, BIG)
-        hit_ref[...] = hit.astype(jnp.float32)
-        prune_ref[...] = (~alive).astype(jnp.float32)
+        carry = (d1_ref[...], d2_ref[...], res_ref[...], alive_ref[...])
+        d1, d2, res, alive = jax.lax.fori_loop(0, tile, body, carry)
+        d1_ref[...] = d1
+        d2_ref[...] = d2
+        res_ref[...] = res
+        alive_ref[...] = alive
+
+        # prune verdicts are only emitted at a band boundary — here, the
+        # final one; the certificate itself rides the scratch accumulator
+        @pl.when(j == nbands - 1)
+        def _emit():
+            hit = res <= eps
+            out_ref[...] = jnp.where(hit, res, BIG)
+            hit_ref[...] = hit.astype(jnp.float32)
+            prune_ref[...] = 1.0 - alive
 
     return kernel
 
 
 def wavefront_pallas(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col,
                      border_row, lens, eps, *, mode, Lx, Ly, d, block_b,
-                     interpret):
-    """Run the kernel on pre-laid-out inputs (traceable — the registry owns
-    jit caching; see ``registry.KernelSpec.device_call``).
+                     interpret, tile: Optional[int] = None):
+    """Run the banded kernel on pre-laid-out inputs (traceable — the
+    registry owns jit caching; see ``registry.KernelSpec.device_call``).
 
-    Returns ``(dist, hit, pruned)`` as (B,) float32 arrays: masked
-    distances (``BIG`` where the verdict is a miss), the hit mask, and the
-    early-prune certificate mask.
+    ``tile`` is the band depth in anti-diagonals (static per shape; the
+    registry's ``default_tile`` VMEM-budget heuristic picks it when None).
+    ``tile >= Lx + Ly`` degenerates to a single band — the exact untiled
+    schedule.  Returns ``(dist, hit, pruned)`` as (B,) float32 arrays:
+    masked distances (``BIG`` where the verdict is a miss), the hit mask,
+    and the early-prune certificate mask.
     """
     B = x_pad.shape[0]
-    Ypad = y_rev_pad.shape[1]
-    grid = (B // block_b,)
-    kernel = _make_kernel(mode, Lx, Ly, d)
+    W = Lx + 1
+    K = Lx + Ly
+    T = K if tile is None else max(1, min(int(tile), K))
+    nbands = -(-K // T)
+    Wb = Lx + T
+    y_bands = band_layout(y_rev_pad, Lx, Ly, T)    # (B, nbands*Wb, d)
+    gy_bands = band_layout(gap_y_rev, Lx, Ly, T)   # (B, nbands*Wb)
+    grid = (B // block_b, nbands)
+    kernel = _make_kernel(mode, Lx, Ly, d, T, nbands)
     outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, Lx + 1, d), lambda b: (b, 0, 0)),
-            pl.BlockSpec((block_b, Ypad, d), lambda b: (b, 0, 0)),
-            pl.BlockSpec((block_b, Lx + 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, Ypad), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, Lx + 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, Ly + 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, 2), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, W, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((block_b, Wb, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((block_b, W), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, Wb), lambda b, j: (b, j)),
+            pl.BlockSpec((block_b, Lx + 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, Ly + 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, 2), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b, j: (b, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b, j: (b, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, W), jnp.float32),   # carry diagonal k-1
+            pltpu.VMEM((block_b, W), jnp.float32),   # carry diagonal k-2
+            pltpu.VMEM((block_b, 1), jnp.float32),   # recorded answers
+            pltpu.VMEM((block_b, 1), jnp.float32),   # fused-ε liveness
+        ],
         interpret=interpret,
-    )(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col, border_row, lens, eps)
+    )(x_pad, y_bands, gap_x, gy_bands, border_col, border_row, lens, eps)
     dist, hit, pruned = outs
     return dist[:, 0], hit[:, 0] > 0, pruned[:, 0] > 0
+
+
+def wavefront_scan(x_pad, y_rev_pad, gap_x, gap_y_rev, border_col,
+                   border_row, lens, eps, *, mode, Lx, Ly, d):
+    """Compiled ``lax.scan`` wavefront — the registry's ``exec="scan"``
+    execution mode.
+
+    Identical operand layout and per-diagonal update as the Pallas kernel
+    (:func:`_make_step`), but scanned over the ``Lx+Ly`` diagonals as one
+    XLA while loop with a known trip count — no Pallas, no banding, no
+    batch blocking.  On CPU CI this is the measured device-path win (the
+    interpret-mode Pallas emulation is parity theater); on TPU the banded
+    Pallas kernel owns the hot path.  Returns the same ``(dist, hit,
+    pruned)`` triple, bit-identical to the Pallas schedules.
+    """
+    B = x_pad.shape[0]
+    W = Lx + 1
+    lx = lens[:, 0:1]
+    target = lx + lens[:, 1:2]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    step = _make_step(mode, Lx, Ly)
+
+    diag0 = jnp.full((B, W), BIG, jnp.float32).at[:, 0].set(border_col[:, 0])
+    carry0 = (diag0,
+              jnp.full((B, W), BIG, jnp.float32),
+              jnp.where(target == 0, diag0[:, 0:1], BIG),
+              jnp.ones((B, 1), jnp.float32))
+
+    def body(carry, k):
+        s = Lx + 1 + Ly - k  # start of the diagonal window in reversed y
+        ysl = jax.lax.dynamic_slice(y_rev_pad, (0, s, 0), (B, W, d))
+        if mode == "erp":
+            gy = jax.lax.dynamic_slice(gap_y_rev, (0, s), (B, W))
+        else:
+            gy = gap_x
+        return step(k, carry, x_pad, ysl, gap_x, gy, border_col,
+                    border_row, lx, target, eps, ii), None
+
+    (_, _, res, alive), _ = jax.lax.scan(
+        body, carry0, jnp.arange(1, Lx + Ly + 1))
+    hit = res <= eps
+    dist = jnp.where(hit, res, BIG)
+    return dist[:, 0], hit[:, 0] > 0, alive[:, 0] < 0.5

@@ -136,7 +136,7 @@ class ElasticIndex:
                  *, eps_prime: float = 1.0, tight_bounds: bool = True,
                  backend: str = "numpy", max_cohort: int = 256,
                  interpret: bool = True, fleet_mode: str = "rounds",
-                 lb_cascade="off"):
+                 lb_cascade="off", kernel_exec=None, kernel_tile=None):
         from repro.core import _deprecation
         from repro.distances import base as dist_base
         from repro.distances import bounds as dist_bounds
@@ -155,6 +155,8 @@ class ElasticIndex:
         self.eps_prime = eps_prime
         self.tight = tight_bounds
         self.backend = backend
+        self.kernel_exec = kernel_exec
+        self.kernel_tile = kernel_tile
         self.max_cohort = max_cohort
         self.interpret = interpret
         self.fleet_mode = fleet_mode
@@ -181,7 +183,9 @@ class ElasticIndex:
             return None
         ids = np.asarray(ids, np.int64)
         counter = CountedDistance(self.dist, self.data[ids],
-                                  backend=self.backend)
+                                  backend=self.backend,
+                                  kernel_exec=self.kernel_exec,
+                                  kernel_tile=self.kernel_tile)
         net = ReferenceNet(self.dist, counter.data,
                            eps_prime=self.eps_prime,
                            tight_bounds=self.tight, counter=counter)
@@ -390,6 +394,8 @@ class ElasticIndex:
             def evaluate(xs, ys, lx, ly, eps_rows, shard_ids):
                 out = packed_batch(self.dist.name, xs, ys, lx, ly,
                                    eps=eps_rows, interpret=self.interpret,
+                                   exec=self.kernel_exec,
+                                   tile=self.kernel_tile,
                                    shards=shard_ids)
                 return (np.asarray(out.dist, np.float32),
                         int(np.asarray(out.pruned).sum()))
@@ -397,7 +403,8 @@ class ElasticIndex:
             self._round_eval = (evaluate, True)
         else:
             from repro.core.counter import _resolve_backend
-            batch = _resolve_backend(self.dist, self.backend)
+            batch = _resolve_backend(self.dist, self.backend,
+                                     self.kernel_exec, self.kernel_tile)
 
             def evaluate(xs, ys, lx, ly, eps_rows, shard_ids):
                 return np.asarray(batch(xs, ys, lx, ly), np.float32), 0

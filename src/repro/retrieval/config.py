@@ -25,6 +25,14 @@ kernel_backend device-kernel substrate override, orthogonal to
                ``None`` follows ``backend``.  ``pallas`` routes every
                dispatch through the kernel registry's packed ragged-bucket
                dispatcher with fused ε-pruning
+kernel_exec    wavefront execution mode for the pallas substrate:
+               ``pallas`` (the banded VMEM-blocked kernel) or ``scan``
+               (the compiled ``lax.scan`` wavefront — the CPU-CI win);
+               ``None`` follows the kernel registry's process-wide policy
+               (``REPRO_KERNEL_EXEC`` env var, default ``pallas``)
+kernel_tile    anti-diagonal band depth of the tiled Pallas wavefront
+               (static per shape); ``None`` = the registry's VMEM-budget
+               heuristic (``registry.default_tile``)
 lb_cascade     tiered LB policy screening verdict frontiers before the
                exact DP: ``"off" | "endpoint" | "envelope"`` (legacy
                booleans normalize to off/endpoint).  ``endpoint`` runs the
@@ -80,6 +88,8 @@ class RetrievalConfig:
     execution: str = "batched"
     backend: str = "numpy"
     kernel_backend: Optional[str] = None
+    kernel_exec: Optional[str] = None
+    kernel_tile: Optional[int] = None
     lb_cascade: Union[bool, str] = False
     workers: Optional[Tuple[str, ...]] = None
     fleet_mode: str = "rounds"
@@ -124,6 +134,16 @@ class RetrievalConfig:
             raise ValueError(
                 f"kernel_backend must be one of {BACKENDS} (or None to "
                 f"follow 'backend'); got {self.kernel_backend!r}")
+        if self.kernel_exec is not None:
+            from repro.kernels.registry import EXEC_MODES
+            if self.kernel_exec not in EXEC_MODES:
+                raise ValueError(
+                    f"kernel_exec must be one of {EXEC_MODES} (or None to "
+                    f"follow the registry policy); got {self.kernel_exec!r}")
+        if self.kernel_tile is not None and self.kernel_tile < 1:
+            raise ValueError(
+                f"kernel_tile must be >= 1 (or None for the VMEM-budget "
+                f"heuristic); got {self.kernel_tile}")
 
         if self.lam is not None:
             if self.lam < 2:

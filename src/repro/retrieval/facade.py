@@ -207,6 +207,7 @@ class _MatcherEngine:
             eps_prime=cfg.eps_prime, num_max=cfg.num_max,
             tight_bounds=cfg.tight_bounds, mv_refs=cfg.mv_refs,
             backend=cfg.effective_backend, lb_cascade=cfg.lb_cascade,
+            kernel_exec=cfg.kernel_exec, kernel_tile=cfg.kernel_tile,
             batched=(cfg.execution == "batched"),
             bulk_build=cfg.bulk_build).build(seqs)
 
@@ -256,7 +257,9 @@ class _WindowEngine:
         dist = cfg.dist
         data = self.spec.prepare_data(data)
         self.counter = CountedDistance(dist, data,
-                                       backend=cfg.effective_backend)
+                                       backend=cfg.effective_backend,
+                                       kernel_exec=cfg.kernel_exec,
+                                       kernel_tile=cfg.kernel_tile)
         self.index = self.spec.factory(dist, data, counter=self.counter,
                                        **self.spec.tuning(cfg))
         if self.spec.bulk and cfg.bulk_build:
@@ -319,6 +322,7 @@ class _FleetEngine:
         self.fleet = ElasticIndex(
             cfg.dist, data, list(cfg.workers), eps_prime=cfg.eps_prime,
             tight_bounds=cfg.tight_bounds, backend=cfg.effective_backend,
+            kernel_exec=cfg.kernel_exec, kernel_tile=cfg.kernel_tile,
             max_cohort=cfg.max_cohort, interpret=cfg.interpret,
             fleet_mode=cfg.fleet_mode, lb_cascade=cfg.lb_cascade)
         self.dead: set = set()

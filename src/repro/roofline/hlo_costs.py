@@ -24,7 +24,7 @@ arithmetic intensity of a compiled kernel — e.g. the O(B*L) elementwise
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
@@ -232,7 +232,58 @@ def parse_hlo_costs(hlo: str) -> Dict:
     return total
 
 
-def kernel_cost_report(fn, *args) -> Dict:
+def band_intensity_report(Lx: int, Ly: int, d: int = 1, *, tile: int,
+                          block_b: int = 8) -> Dict:
+    """Analytic per-band arithmetic intensity of the wavefront schedules.
+
+    Neither cost source in :func:`kernel_cost_report` can see the banding
+    win: ``cost_analysis()`` weights while bodies once, and HLO text
+    carries no VMEM-residency information.  This deterministic model
+    compares the two schedules at the same work granularity — one band of
+    ``tile`` anti-diagonals, ``tile * (Lx+1)`` DP cells:
+
+    * **flops per band** — identical for both schedules (the banded kernel
+      runs the exact same per-cell math): ``tile * (Lx+1) * c_cell`` with
+      ``c_cell ~ 3d + 8`` (elementwise cost + sqrt + combine/clamp).
+    * **bytes per band** — what each schedule must stage for that band.
+      The tiled kernel stages only its ``(Lx + tile)``-wide reversed-y
+      window (plus x, borders, and the carry diagonals riding scratch);
+      the untiled schedule keeps the full ``2*Lx+Ly+1``-wide reversed-y
+      operand resident for *any* stretch of diagonals.
+
+    Per-band intensity of the untiled schedule therefore collapses
+    ~``tile/(Lx+Ly)`` as segments grow, while the tiled kernel's is pinned
+    by the VMEM budget — the whole point of the banding (and strictly
+    above untiled for every ``tile <= Lx+Ly``).  Per-batch-row units
+    (``block_b`` scales flops and bytes alike, so it cancels).
+    """
+    W = Lx + 1
+    K = Lx + Ly
+    T = max(1, min(int(tile), K))
+    c_cell = 3 * d + 8
+    flops_band = float(T * W * c_cell)
+
+    def band_bytes(y_width: int) -> float:
+        # f32 residency per band and batch row: x tile, the reversed-y
+        # window (+ the ERP gap row riding next to it), border col + row,
+        # two carry diagonals, answer/liveness columns
+        return 4.0 * (W * d + y_width * (d + 1) + W + (Ly + 1)
+                      + 2 * W + 4)
+
+    tiled_bytes = band_bytes(Lx + T)
+    untiled_bytes = band_bytes(2 * Lx + Ly + 1)
+    return {
+        "tile": T,
+        "bands": -(-K // T),
+        "flops_per_band": flops_band,
+        "tiled_bytes_per_band": tiled_bytes,
+        "untiled_bytes_per_band": untiled_bytes,
+        "tiled_band_intensity": flops_band / tiled_bytes,
+        "untiled_band_intensity": flops_band / untiled_bytes,
+    }
+
+
+def kernel_cost_report(fn, *args, band: Optional[Dict] = None) -> Dict:
     """Compile ``fn(*args)`` and report its roofline inputs.
 
     Combines two sources:
@@ -248,6 +299,11 @@ def kernel_cost_report(fn, *args) -> Dict:
     Returns ``{'flops', 'bytes', 'arithmetic_intensity', 'dot_flops',
     'dot_bytes', 'n_while'}``; compiler fields are 0.0 when the backend
     exposes no cost model (arithmetic intensity then reads 0.0 too).
+
+    ``band`` (kwargs for :func:`band_intensity_report`, e.g. ``dict(Lx=24,
+    Ly=24, d=2, tile=25)``) additionally merges the analytic per-band
+    intensity of the tiled vs untiled wavefront schedule into the report —
+    the banding effect neither compiled source can express.
     """
     import jax
 
@@ -259,7 +315,7 @@ def kernel_cost_report(fn, *args) -> Dict:
     flops = float(ca.get("flops", 0.0))
     nbytes = float(ca.get("bytes accessed", 0.0))
     parsed = parse_hlo_costs(compiled.as_text())
-    return {
+    rep = {
         "flops": flops,
         "bytes": nbytes,
         "arithmetic_intensity": flops / nbytes if nbytes else 0.0,
@@ -267,3 +323,6 @@ def kernel_cost_report(fn, *args) -> Dict:
         "dot_bytes": parsed["dot_bytes"],
         "n_while": parsed["n_while"],
     }
+    if band is not None:
+        rep.update(band_intensity_report(**band))
+    return rep

@@ -123,6 +123,8 @@ class FleetSnapshotManager:
                 "backend": fleet.backend, "max_cohort": fleet.max_cohort,
                 "interpret": fleet.interpret, "fleet_mode": fleet.fleet_mode,
                 "lb_cascade": fleet.lb_cascade,
+                "kernel_exec": fleet.kernel_exec,
+                "kernel_tile": fleet.kernel_tile,
                 "retired": dict(fleet._retired),
                 "device_stats": dict(fleet.device_stats),
                 "shards": shard_meta}
@@ -172,6 +174,9 @@ class FleetSnapshotManager:
         fleet.interpret = meta["interpret"]
         fleet.fleet_mode = meta["fleet_mode"]
         fleet.lb_cascade = meta["lb_cascade"]
+        # absent in pre-PR-10 snapshots: fall back to the registry policy
+        fleet.kernel_exec = meta.get("kernel_exec")
+        fleet.kernel_tile = meta.get("kernel_tile")
         fleet.workers = list(meta["workers"])
         # rendezvous assignment is a pure function of (n windows, workers)
         fleet.assignment = elastic.assign(range(len(fleet.data)),

@@ -110,6 +110,44 @@ def test_trace_shape_branch_clean(tmp_path):
     assert rules == []
 
 
+def test_trace_scan_body_is_a_region(tmp_path):
+    """A lax.scan body is traced code even with no jit decorator anywhere
+    — the PR-10 scan-mode wavefront enters the registry's jit cache this
+    way, so branching on its carry must trip the host-branch rule."""
+    rules = rules_of(tmp_path, """
+        from jax import lax
+
+        def body(carry, k):
+            if carry > 0:
+                carry = carry - k
+            return carry, carry
+
+        def drive(c0, ks):
+            return lax.scan(body, c0, ks)
+        """, ["trace"])
+    assert rules == ["trace-host-branch"]
+
+
+def test_trace_scan_body_static_config_callee_clean(tmp_path):
+    """Closure config objects forwarded from a scan body into a one-hop
+    callee stay static there: branch-on-config is not branch-on-traced."""
+    rules = rules_of(tmp_path, """
+        import jax.numpy as jnp
+        from jax import lax
+
+        def attend(x, cfg):
+            if cfg.gated:
+                x = x * 2.0
+            return jnp.tanh(x)
+
+        def drive(c0, ks, cfg):
+            def body(carry, k):
+                return attend(carry, cfg), k
+            return lax.scan(body, c0, ks)
+        """, ["trace"])
+    assert rules == []
+
+
 def test_trace_concretize_and_numpy_trip(tmp_path):
     rules = rules_of(tmp_path, """
         import jax
